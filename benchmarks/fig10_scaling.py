@@ -1,0 +1,58 @@
+"""Paper Figure 10: throughput trend with increasing problem size.
+
+Expectation from the paper: throughput climbs until resources saturate,
+then plateaus. On CPU the same qualitative curve appears (dispatch overhead
+amortizes, then memory bandwidth saturates).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import StencilEngine
+from repro.core.stencil import make_stencil
+
+SIZES = (64, 128, 256, 512, 1024, 2048)
+
+
+def run(iters: int = 5) -> List[dict]:
+    rows = []
+    for shape, r in (("box", 2), ("star", 2)):
+        spec = make_stencil(shape, 2, r, seed=3)
+        eng = StencilEngine(spec, backend="sptc")
+        for n in SIZES:
+            x = jnp.asarray(np.random.default_rng(0).normal(
+                size=(n + 2 * r, n + 2 * r)).astype(np.float32))
+            y = eng(x)
+            jax.block_until_ready(y)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                y = eng(x)
+            jax.block_until_ready(y)
+            dt = (time.perf_counter() - t0) / iters
+            rows.append({"stencil": spec.name, "n": n,
+                         "gstencils": n * n / dt / 1e9})
+    return rows
+
+
+def main():
+    print("# Fig 10 — SPTC-backend throughput vs problem size")
+    print("stencil,n,gstencils_per_s")
+    rows = run()
+    for row in rows:
+        print(f"{row['stencil']},{row['n']},{row['gstencils']:.3f}")
+    # qualitative check: large >= small (saturation curve)
+    by = {}
+    for row in rows:
+        by.setdefault(row["stencil"], []).append(row["gstencils"])
+    for k, v in by.items():
+        print(f"# {k}: small {v[0]:.3f} -> large {v[-1]:.3f} "
+              f"({v[-1]/max(v[0],1e-9):.1f}x scaling gain)")
+
+
+if __name__ == "__main__":
+    main()

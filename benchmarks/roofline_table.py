@@ -1,0 +1,65 @@
+"""Roofline table: render results/dryrun_*.jsonl as the per-(arch x cell x
+mesh) three-term table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(paths=None) -> List[dict]:
+    rows = []
+    paths = paths or [os.path.join(RESULTS, f) for f in
+                      sorted(os.listdir(RESULTS))
+                      if f.startswith("dryrun") and f.endswith(".jsonl")]
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                rows.append(json.loads(line))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['cell']} | {r['mesh']} | — | — | — | "
+                f"skipped ({r['skipped'][:40]}…) | — | — |")
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['cell']} | {r['mesh']} | — | — | — | "
+                f"FAILED: {r.get('error', '?')[:50]} | — | — |")
+    return ("| {arch} | {cell} | {mesh} | {tc:.4f} | {tm:.4f} | {tl:.4f} | "
+            "{bn} | {uf:.2f} | {mfu:.3f} |").format(
+        arch=r["arch"], cell=r["cell"], mesh=r["mesh"],
+        tc=r["t_compute_s"], tm=r["t_memory_s"], tl=r["t_collective_s"],
+        bn=r["bottleneck"], uf=r.get("useful_frac", 0),
+        mfu=r.get("mfu_at_roofline", 0))
+
+
+def main():
+    try:
+        rows = load(sys.argv[1:] or None)
+    except FileNotFoundError:
+        print("# no dry-run results yet — run repro.launch.dryrun first")
+        return
+    if not rows:
+        print("# no dry-run results yet — run repro.launch.dryrun first")
+        return
+    print("| arch | cell | mesh | t_compute s | t_memory s | t_coll s | "
+          "bottleneck | useful | MFU@roof |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"],
+                                         r.get("mesh", ""))):
+        print(fmt_row(r))
+    ok = [r for r in rows if r.get("ok") and not r.get("skipped")
+          and "t_compute_s" in r]
+    if ok:
+        import collections
+        bn = collections.Counter(r["bottleneck"] for r in ok)
+        print(f"\n# {len(ok)} compiled cells; bottleneck distribution: "
+              f"{dict(bn)}")
+
+
+if __name__ == "__main__":
+    main()

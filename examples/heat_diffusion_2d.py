@@ -1,0 +1,53 @@
+"""End-to-end driver of the paper's kind: iterative 2-D stencil computation
+(heat diffusion), run through the SPTCStencil execution path.
+
+Solves u_t = alpha * laplacian(u) with an explicit Star-2D1R update on a
+512x512 grid for 400 time steps, comparing the sparse-tensor-core execution
+path against the direct oracle, and reporting GStencils/s (the paper's
+metric).
+
+    PYTHONPATH=src python examples/heat_diffusion_2d.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import StencilEngine
+from repro.core.stencil import StencilSpec
+
+N, STEPS, ALPHA = 512, 400, 0.2
+
+# explicit heat update: u += alpha * (sum 4-neighbours - 4u)
+w = np.zeros((3, 3))
+w[0, 1] = w[2, 1] = w[1, 0] = w[1, 2] = ALPHA
+w[1, 1] = 1 - 4 * ALPHA
+spec = StencilSpec(shape="star", ndim=2, radius=1, weights=w)
+
+# hot square in a cold plate
+u0 = np.zeros((N, N), np.float32)
+u0[N // 4:N // 2, N // 4:N // 2] = 100.0
+u0 = jnp.asarray(np.pad(u0, 1))
+
+for backend in ("direct", "sptc"):
+    eng = StencilEngine(spec, backend=backend)
+    u = eng.iterate(u0, steps=1)            # warm up compile
+    jax.block_until_ready(u)
+    t0 = time.perf_counter()
+    u = eng.iterate(u0, steps=STEPS)
+    jax.block_until_ready(u)
+    dt = time.perf_counter() - t0
+    rate = N * N * STEPS / dt / 1e9
+    total = float(jnp.sum(u))
+    print(f"{backend:8s}: {dt:6.2f}s  {rate:6.3f} GStencils/s  "
+          f"sum(u)={total:.1f}")
+    if backend == "direct":
+        ref = u
+    else:
+        err = float(jnp.max(jnp.abs(u - ref)))
+        print(f"{'':8s}  max|sptc - direct| after {STEPS} steps = {err:.2e}")
+        assert err < 1e-2, "sparse path diverged from oracle"
+
+# heat is conserved up to the insulated-boundary loss
+print("heat diffusion OK")

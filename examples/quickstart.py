@@ -1,0 +1,44 @@
+"""Quickstart: the paper's technique in ~40 lines.
+
+A Box-2D3R stencil is transformed into banded kernel matrices, strided-swap
+permuted into 2:4 structured sparsity, encoded into the SpTC compressed
+(values, metadata) form, and executed — all backends agree bit-tight.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (apply_stencil, kernel_matrix, make_stencil,
+                        sparsify_stencil_kernel)
+from repro.core.sparsify import is_24_sparse, apply_col_perm
+
+# 1. a Box-2D stencil of radius 3 (the paper's headline configuration)
+spec = make_stencil("box", 2, 3, seed=42)
+print(f"stencil: {spec.name}, {spec.taps} taps")
+
+# 2. one row of the kernel -> banded matrix K (L x 2L), L = 2r+2
+row = spec.weights[3]                       # center row, shape (7,)
+K = kernel_matrix(row)                      # (8, 16) band, 50% dense
+print(f"kernel matrix: {K.shape}, density {np.mean(K != 0):.2f}")
+
+# 3. strided swap -> valid 2:4 pattern -> compressed (values, metadata)
+sk = sparsify_stencil_kernel(row)
+Kp = apply_col_perm(K, sk.perm)
+print(f"2:4 sparse after swap: {is_24_sparse(Kp)}")
+print(f"compressed operand: {sk.values.shape} (was {K.shape}) — "
+      f"half the reduction width")
+print(f"metadata sample (row 0): {sk.meta[0][:8].tolist()}")
+
+# 4. execute the full 2-D stencil through each backend
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(128 + 6, 128 + 6)).astype(np.float32))
+y_direct = apply_stencil(spec, x, backend="direct")    # pointwise oracle
+y_gemm = apply_stencil(spec, x, backend="gemm")        # dense TC analogue
+y_sptc = apply_stencil(spec, x, backend="sptc")        # the paper's method
+
+print(f"gemm  vs direct: max|err| = "
+      f"{float(jnp.max(jnp.abs(y_gemm - y_direct))):.2e}")
+print(f"sptc  vs direct: max|err| = "
+      f"{float(jnp.max(jnp.abs(y_sptc - y_direct))):.2e}")
+print("quickstart OK")

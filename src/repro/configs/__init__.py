@@ -1,0 +1,4 @@
+from repro.configs.base import ModelConfig, ShapeCell, SHAPE_CELLS
+from repro.configs.registry import ARCHS, get_config, input_specs, iter_cells
+__all__ = ["ModelConfig", "ShapeCell", "SHAPE_CELLS", "ARCHS", "get_config",
+           "input_specs", "iter_cells"]

@@ -1,0 +1,31 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256, gated cross-attn image layers every 5 blocks.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+Vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, n_img_tokens, d_model) consumed by the
+gated cross-attention layers.
+"""
+from repro.configs.base import ModelConfig
+
+ARCH = "llama-3.2-vision-11b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="vlm",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=128256,
+        rope_theta=500_000.0,
+        cross_attn_every=5, n_img_tokens=1600,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="vlm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256,
+        cross_attn_every=2, n_img_tokens=8,
+        max_seq=128, remat=False, dtype="float32",
+    )

@@ -1,0 +1,31 @@
+"""mixtral-8x22b [moe] — 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]
+
+The largest assigned config (~141B params). SWA (4096) bounds the decode
+ring cache — qualifies for long_500k (DESIGN.md §4). Runs FSDP+TP+EP.
+"""
+from repro.configs.base import ModelConfig
+
+ARCH = "mixtral-8x22b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab=32768,
+        n_experts=8, top_k=2, sliding_window=4096,
+        rope_theta=1e6,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=256,
+        n_experts=4, top_k=2, moe_group=64, sliding_window=16,
+        capacity_factor=8.0,            # drop-free: decode==forward exactly
+        max_seq=128, remat=False, dtype="float32",
+    )

@@ -1,0 +1,70 @@
+"""Architecture registry: --arch <id> -> ModelConfig (full or smoke), plus
+ShapeDtypeStruct input specs for every (arch x shape-cell) dry-run cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ShapeCell, SHAPE_CELLS,
+                                SHAPE_BY_NAME, cell_applicable)
+
+_MODULES: Dict[str, str] = {
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choices: {ARCHS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.smoke() if smoke else mod.config()
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train    -> tokens (B, S+1)  (loss shifts internally)  [+ memory stub]
+    prefill  -> tokens (B, S)                               [+ memory stub]
+    decode   -> token (B, 1) + cache pytree (serve_step)
+    """
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s + 1), i32)}
+    elif cell.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode
+        from repro.serving.cache import init_cache
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32), "cache": cache}
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "vlm":
+        specs["memory"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens, cfg.d_model), dt)
+    elif cfg.family == "encdec":
+        specs["memory"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), dt)
+    return specs
+
+
+def iter_cells(arch: str):
+    """Applicable (cell, skip_reason) pairs for an arch (DESIGN.md §4)."""
+    cfg = get_config(arch)
+    for cell in SHAPE_CELLS:
+        if cell_applicable(arch, cell, cfg.family):
+            yield cell, None
+        else:
+            yield cell, "long_500k needs sub-quadratic attention; " \
+                        "this arch is pure full-attention"

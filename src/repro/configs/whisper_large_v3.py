@@ -1,0 +1,33 @@
+"""whisper-large-v3 [audio/encdec] — 32L(enc)+32L(dec) d_model=1280 20H
+(kv=20, MHA) d_ff=5120 vocab=51866 — encoder-decoder, learned positions,
+LayerNorm + GELU. Conv frontend is a STUB per the assignment: input_specs()
+provides precomputed frame embeddings (B, 1500, d_model).
+[arXiv:2212.04356; unverified]
+
+max_seq=32768 extends the decoder's learned-position table to the assigned
+decode_32k cell (the real model stops at 448); long_500k is skipped (full
+attention, DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+ARCH = "whisper-large-v3"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="encdec",
+        n_layers=32, n_enc_layers=32, d_model=1280, n_heads=20,
+        n_kv_heads=20, d_ff=5120, vocab=51866,
+        n_frames=1500, pos_emb="learned", act="gelu", norm="ln",
+        max_seq=32768,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="encdec",
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256,
+        n_frames=16, pos_emb="learned", act="gelu", norm="ln",
+        max_seq=128, remat=False, dtype="float32",
+    )

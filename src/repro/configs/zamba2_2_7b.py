@@ -1,0 +1,34 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 32H (kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 backbone + weight-SHARED attention
+blocks applied every 6 layers (9 applications of one block).
+[arXiv:2411.15242; hf]
+
+Technique host: the Mamba2 conv1d path (kernels/conv1d), as in mamba2-2.7b.
+Simplification vs the released model (noted per DESIGN.md): one shared
+transformer block instead of two alternating ones, and no LoRA adapters on
+the shared block.
+"""
+from repro.configs.base import ModelConfig
+
+ARCH = "zamba2-2.7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+        d_ff=10240, vocab=32000,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, conv_width=4,
+        attn_every=6,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256,
+        ssm_state=16, ssm_head_dim=16, ssm_expand=2, conv_width=4,
+        ssm_chunk=16, attn_every=2,
+        max_seq=128, remat=False, dtype="float32",
+    )

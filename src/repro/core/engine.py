@@ -1,0 +1,270 @@
+"""StencilEngine — applies stencils through interchangeable backends.
+
+Backends (all mathematically equivalent; cross-checked in tests):
+  direct      pure-jnp shifted multiply-add — the semantic oracle.
+  gemm        dense kernel-matrix GEMM (generalized TCStencil, paper §3.2.1):
+              banded (L, 2L) matrix times 2L-row input windows.
+  sptc        simulated Sparse Tensor Core execution: strided-swap permuted
+              + 2:4-compressed kernel, row-swapped inputs (paper §3.2.2/§3.3).
+  pallas_*    Pallas TPU kernels (see repro.kernels), same math.
+
+Input convention: ``x`` carries the halo — shape (N1+2r, ..., Nd+2r) — and
+the output is the (N1, ..., Nd) interior update.
+
+d-D stencils decompose by kernel rows into 1-D stencils along the last axis
+(paper §3.2.1); star stencils additionally get a per-axis fast path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sptc
+from repro.core.sparsify import sparsify_stencil_kernel
+from repro.core.stencil import StencilSpec
+from repro.core.transform import (axis_decompose_star, decompose_rows,
+                                  default_l, kernel_matrix)
+
+BACKENDS = ("direct", "gemm", "sptc", "pallas_direct", "pallas_mxu",
+            "pallas_sptc")
+
+
+# ---------------------------------------------------------------------------
+# 1-D application primitives (stencil axis leading, free axis trailing)
+# ---------------------------------------------------------------------------
+
+def _windows(x2d: jnp.ndarray, n_out: int, L: int) -> jnp.ndarray:
+    """Overlapping (ntiles, 2L, C) windows of a (rows, C) input.
+
+    Tile t covers outputs [tL, tL+L) and reads input rows [tL, tL+2L).
+    Rows are zero-padded so every window is in-bounds; the pad rows only ever
+    multiply structurally-zero kernel-matrix columns.
+    """
+    ntiles = -(-n_out // L)
+    need = (ntiles + 1) * L
+    x2d = jnp.pad(x2d, ((0, max(0, need - x2d.shape[0])), (0, 0)))
+    idx = (jnp.arange(ntiles) * L)[:, None] + jnp.arange(2 * L)[None, :]
+    return x2d[idx], ntiles
+
+
+def _apply_1d_direct(w: np.ndarray, x2d: jnp.ndarray, n_out: int) -> jnp.ndarray:
+    taps = w.shape[0]
+    acc = jnp.zeros((n_out, x2d.shape[1]), dtype=x2d.dtype)
+    for k in range(taps):
+        if w[k] != 0:
+            acc = acc + jnp.asarray(w[k], dtype=x2d.dtype) * x2d[k:k + n_out]
+    return acc
+
+
+def _apply_1d_gemm(w: np.ndarray, x2d: jnp.ndarray, n_out: int,
+                   L: int) -> jnp.ndarray:
+    K = jnp.asarray(kernel_matrix(w, L=L, pad_width=True), dtype=x2d.dtype)
+    win, ntiles = _windows(x2d, n_out, L)
+    y = jnp.einsum("lk,tkc->tlc", K, win,
+                   preferred_element_type=jnp.float32).astype(x2d.dtype)
+    return y.reshape(ntiles * L, -1)[:n_out]
+
+
+def _apply_1d_sptc(w: np.ndarray, x2d: jnp.ndarray, n_out: int,
+                   L: int) -> jnp.ndarray:
+    sk = sparsify_stencil_kernel(w, L=L)
+    win, ntiles = _windows(x2d, n_out, L)
+    win = win[:, np.asarray(sk.perm), :]          # zero-cost row swap (§3.3)
+    values = jnp.asarray(sk.values, dtype=x2d.dtype)
+    meta = jnp.asarray(sk.meta)
+    y = jax.vmap(lambda xw: sptc.sptc_matmul(values, meta, xw))(win)
+    return y.reshape(ntiles * L, -1)[:n_out]
+
+
+def _apply_1d_pallas_mxu(w: np.ndarray, x2d: jnp.ndarray, n_out: int,
+                         L: int) -> jnp.ndarray:
+    from repro.kernels.stencil_gemm.ops import windows_gemm
+    K = jnp.asarray(kernel_matrix(w, L=L, pad_width=True), dtype=x2d.dtype)
+    win, ntiles = _windows(x2d, n_out, L)
+    y = windows_gemm(K, win)
+    return y.reshape(ntiles * L, -1)[:n_out]
+
+
+def _apply_1d_pallas_sptc(w: np.ndarray, x2d: jnp.ndarray, n_out: int,
+                          L: int) -> jnp.ndarray:
+    from repro.kernels.sptc_spmm.ops import sptc_spmm_windows
+    sk = sparsify_stencil_kernel(w, L=L)
+    win, ntiles = _windows(x2d, n_out, L)
+    win = win[:, np.asarray(sk.perm), :]          # zero-cost row swap (§3.3)
+    y = sptc_spmm_windows(jnp.asarray(sk.values, dtype=x2d.dtype),
+                          jnp.asarray(sk.meta), win)
+    return y.reshape(ntiles * L, -1)[:n_out]
+
+
+def apply_1d(w: np.ndarray, x: jnp.ndarray, n_out: int, axis: int,
+             backend: str, L: int | None = None) -> jnp.ndarray:
+    """Apply a 1-D stencil kernel along ``axis`` of ``x`` (halo included)."""
+    r = (w.shape[0] - 1) // 2
+    if L is None:
+        L = default_l(r)
+    x = jnp.moveaxis(x, axis, 0)
+    lead, rest = x.shape[0], x.shape[1:]
+    x2d = x.reshape(lead, -1)
+    if backend == "direct":
+        y = _apply_1d_direct(w, x2d, n_out)
+    elif backend == "gemm":
+        y = _apply_1d_gemm(w, x2d, n_out, L)
+    elif backend == "sptc":
+        y = _apply_1d_sptc(w, x2d, n_out, L)
+    elif backend == "pallas_mxu":
+        y = _apply_1d_pallas_mxu(w, x2d, n_out, L)
+    elif backend == "pallas_sptc":
+        y = _apply_1d_pallas_sptc(w, x2d, n_out, L)
+    else:
+        raise ValueError(f"unknown 1-D backend {backend}")
+    return jnp.moveaxis(y.reshape((n_out,) + rest), 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class StencilEngine:
+    """Compiled applicator for one StencilSpec."""
+
+    def __init__(self, spec: StencilSpec, backend: str = "direct",
+                 L: int | None = None, star_fast_path: bool = True,
+                 fuse_rows: bool = False):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        self.spec = spec
+        self.backend = backend
+        self.L = L if L is not None else default_l(spec.radius)
+        self.star_fast_path = star_fast_path and spec.shape == "star"
+        # §Perf D: one window-gather + one stacked GEMM for all kernel rows
+        self.fuse_rows = fuse_rows
+        self._fn = jax.jit(self._build())
+
+    # -- graph builders ----------------------------------------------------
+    def _build(self) -> Callable:
+        if self.backend == "pallas_direct":
+            return self._build_pallas()
+        spec, backend, L = self.spec, self.backend, self.L
+        r, d = spec.radius, spec.ndim
+
+        if d == 1:
+            w = spec.weights
+
+            def fn(x):
+                n_out = x.shape[0] - 2 * r
+                return apply_1d(w, x, n_out, 0, backend, L)
+            return fn
+
+        if self.star_fast_path:
+            axis_kernels = axis_decompose_star(spec)
+
+            def fn(x):
+                out_shape = tuple(s - 2 * r for s in x.shape)
+                acc = jnp.zeros(out_shape, dtype=x.dtype)
+                for axis, wk in enumerate(axis_kernels):
+                    sl = tuple(
+                        slice(None) if a == axis else slice(r, r + out_shape[a])
+                        for a in range(d))
+                    acc = acc + apply_1d(wk, x[sl], out_shape[axis], axis,
+                                         backend, L)
+                return acc
+            return fn
+
+        rows = decompose_rows(spec)
+
+        if self.fuse_rows and d == 2 and backend in ("gemm", "sptc"):
+            return self._build_fused_2d(rows)
+
+        def fn(x):
+            out_shape = tuple(s - 2 * r for s in x.shape)
+            acc = jnp.zeros(out_shape, dtype=x.dtype)
+            for lead, wrow in rows:
+                sl = tuple(slice(u, u + out_shape[a])
+                           for a, u in enumerate(lead)) + (slice(None),)
+                acc = acc + apply_1d(wrow, x[sl], out_shape[-1], d - 1,
+                                     backend, L)
+            return acc
+        return fn
+
+    def _build_fused_2d(self, rows):
+        """§Perf D optimization: ONE window gather + ONE stacked GEMM for
+        all 2r+1 kernel rows of a 2-D stencil (vs 2r+1 of each).
+
+        Every row kernel sees the same last-axis window structure; only the
+        leading-axis slice differs. So gather windows of the FULL input
+        once, multiply by the (R·L, 2L) concatenation of all row kernel
+        matrices (R = #rows), then accumulate each row's result from a
+        shifted column slice. Same MACs, ~R× fewer gathers/dispatches and
+        one MXU-friendly tall GEMM.
+        """
+        from repro.core.sparsify import apply_col_perm, strided_swap_perm
+        spec, backend, L = self.spec, self.backend, self.L
+        r = spec.radius
+        R = len(rows)
+        perm = strided_swap_perm(L) if backend == "sptc" else None
+        mats = []
+        for _, wrow in rows:
+            Kr = kernel_matrix(wrow, L=L, pad_width=True)
+            if perm is not None:
+                # the dense equivalent of the 2:4-compressed operand: the
+                # fused GEMM computes exactly what R sptc_matmul calls do
+                Kr = apply_col_perm(Kr, perm)
+            mats.append(Kr)
+        K_all = np.concatenate(mats, axis=0)          # (R*L, 2L)
+        leads = [int(lead[0]) for lead, _ in rows]
+
+        def fn(x):
+            h_in = x.shape[0]
+            h_out = h_in - 2 * r
+            w_out = x.shape[1] - 2 * r
+            xt = x.T                                   # (W+2r, H+2r)
+            win, ntiles = _windows(xt, w_out, L)       # (T, 2L, H+2r)
+            if perm is not None:
+                win = win[:, np.asarray(perm), :]      # zero-cost row swap
+            Km = jnp.asarray(K_all, dtype=x.dtype)
+            y = jnp.einsum("lk,tkc->tlc", Km, win,
+                           preferred_element_type=jnp.float32
+                           ).astype(x.dtype)           # (T, R*L, H+2r)
+            y = y.reshape(ntiles, R, L, h_in)
+            yr = y.transpose(1, 0, 2, 3).reshape(R, ntiles * L, h_in)
+            acc = jnp.zeros((w_out, h_out), dtype=x.dtype)
+            for i, u in enumerate(leads):
+                acc = acc + yr[i, :w_out, u:u + h_out]
+            return acc.T
+        return fn
+
+    def _build_pallas(self) -> Callable:
+        from repro.kernels import dispatch as kdispatch
+        return kdispatch.build(self.spec, self.backend, self.L)
+
+    # -- public API ----------------------------------------------------------
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._fn(x)
+
+    def iterate(self, x: jnp.ndarray, steps: int) -> jnp.ndarray:
+        """Iterative (Jacobi-style) application with zero-halo re-padding."""
+        r = self.spec.radius
+        pad = [(r, r)] * self.spec.ndim
+
+        def body(x_in, _):
+            y = self._fn(x_in)
+            return jnp.pad(y, pad), None
+
+        out, _ = jax.lax.scan(body, x, None, length=steps)
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_engine(spec_key, backend, L):
+    spec, = spec_key
+    return StencilEngine(spec, backend=backend, L=L)
+
+
+def apply_stencil(spec: StencilSpec, x: jnp.ndarray, backend: str = "direct",
+                  L: int | None = None) -> jnp.ndarray:
+    """One-shot functional entry point."""
+    return StencilEngine(spec, backend=backend, L=L)(x)

@@ -1,0 +1,52 @@
+"""Simulated Sparse Tensor Core semantics (jnp reference).
+
+``mma.sp`` on NVIDIA Ampere computes, per output row i of the LHS:
+
+    y[i, n] = sum_s sum_t  values[i, 2s+t] * X[4s + meta[i, 2s+t], n]
+
+i.e. for every 4-wide segment of the reduction dim it reads only the 2 rows of
+the RHS selected by the 2-bit metadata. TPUs have no such unit; this module is
+the *bit-faithful executable semantics* used as the oracle for the Pallas
+kernel and for the transformation pipeline's correctness proofs. The MAC count
+of the skipped execution (M * K/2 * N) is what `core/analysis.py` charges.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sptc_matmul(values, meta, x):
+    """Compressed 2:4 SpMM: (M, K/2) x metadata x (K, N) -> (M, N).
+
+    values: (M, K/2) float; meta: (M, K/2) int in [0,4); x: (K, N).
+    """
+    m, half = values.shape
+    k = x.shape[0]
+    if half * 2 != k:
+        raise ValueError(f"values width {half} != K/2 = {k//2}")
+    seg = (jnp.arange(half) // 2) * 4
+    gather = seg[None, :] + meta.astype(jnp.int32)        # (M, K/2)
+    xg = x[gather]                                        # (M, K/2, N)
+    return jnp.einsum("mk,mkn->mn", values.astype(x.dtype), xg,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def sptc_matmul_dense_equiv(values, meta, k):
+    """Decompress (values, meta) to the dense (M, K) permuted matrix (jnp)."""
+    m, half = values.shape
+    seg = (jnp.arange(half) // 2) * 4
+    gather = seg[None, :] + meta.astype(jnp.int32)
+    out = jnp.zeros((m, k), dtype=values.dtype)
+    rows = jnp.arange(m)[:, None]
+    return out.at[rows, gather].add(values)
+
+
+def swap_rows(x, perm):
+    """Zero-cost row swap (paper §3.3) — reference form.
+
+    Column-permuting the LHS by ``perm`` requires row-permuting the RHS by the
+    same involution for mathematical equivalence. In the Pallas kernels this
+    indexing is folded into the load address computation; here it is explicit.
+    """
+    return x[np.asarray(perm)]

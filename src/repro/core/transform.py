@@ -1,0 +1,97 @@
+"""Stencil -> matrix-multiplication transform (paper §3.2.1).
+
+A 1-D stencil kernel ``w`` of radius ``r`` becomes a banded *kernel matrix*
+``K`` of shape ``(L, 2r+L)`` with ``K[i, i+k] = w[k]``: ``Y = K @ X`` computes
+``L`` consecutive stencil outputs for every column of ``X`` (the free axis).
+Unlike TCStencil, ``K`` is rectangular — no blank rows.
+
+We pad the width to ``2L`` (columns beyond ``2r+L`` are structurally zero) so
+the strided-swap permutation (sparsify.py) is an involution on column pairs
+``(j, j+L)`` and the 2:4 segment grid divides the width evenly.
+
+Higher-dimensional stencils decompose by kernel rows (paper §3.2.1): a d-D
+kernel is a sum over its leading (d-1)-D offsets of 1-D stencils applied along
+the last axis; partial results accumulate.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.stencil import StencilSpec
+
+
+def default_l(radius: int) -> int:
+    """Paper's choice: L = 2r+2 — exactly 50% band density (§3.2.2 step 1)."""
+    return 2 * radius + 2
+
+
+def kernel_matrix(w: np.ndarray, L: int | None = None,
+                  pad_width: bool = True) -> np.ndarray:
+    """Banded kernel matrix for a 1-D stencil kernel ``w`` (length 2r+1).
+
+    Returns shape ``(L, 2L)`` if pad_width else ``(L, 2r+L)``.
+    Requires ``L >= 2r+2`` and ``L`` even for 2:4 sparsifiability.
+    """
+    w = np.asarray(w)
+    taps = w.shape[0]
+    if taps % 2 != 1:
+        raise ValueError("1-D stencil kernel must have odd length 2r+1")
+    r = (taps - 1) // 2
+    if L is None:
+        L = default_l(r)
+    if L < 2 * r + 2 or L % 2 != 0:
+        raise ValueError(f"need even L >= 2r+2 = {2*r+2}, got {L}")
+    width = 2 * L if pad_width else 2 * r + L
+    K = np.zeros((L, width), dtype=w.dtype)
+    for i in range(L):
+        K[i, i:i + taps] = w
+    return K
+
+
+def decompose_rows(spec: StencilSpec) -> List[Tuple[Tuple[int, ...], np.ndarray]]:
+    """Decompose a d-D stencil into 1-D row kernels (paper §3.2.1).
+
+    Returns a list of ``(lead_offset, w_1d)`` where ``lead_offset`` indexes the
+    leading d-1 axes of the kernel (0-based, i.e. offset - r gives the spatial
+    shift) and ``w_1d`` is the (2r+1,) kernel row applied along the last axis.
+    All-zero rows (star stencils' off-axis rows) are dropped.
+    """
+    w = spec.weights
+    if spec.ndim == 1:
+        return [((), w)]
+    lead_shape = w.shape[:-1]
+    out: List[Tuple[Tuple[int, ...], np.ndarray]] = []
+    for lead in np.ndindex(*lead_shape):
+        row = w[lead]
+        if np.any(row != 0):
+            out.append((lead, row))
+    return out
+
+
+def axis_decompose_star(spec: StencilSpec) -> List[np.ndarray]:
+    """Fast path for star stencils: one 1-D kernel per axis.
+
+    The center tap is kept in the *last*-axis kernel and zeroed in the others
+    so that summing the per-axis 1-D applications counts it exactly once.
+    Returns list of per-axis (2r+1,) kernels, index = axis.
+    """
+    if spec.shape != "star":
+        raise ValueError("axis decomposition only applies to star stencils")
+    r = spec.radius
+    center = (r,) * spec.ndim
+    kernels = []
+    for axis in range(spec.ndim):
+        idx = list(center)
+        idx[axis] = slice(None)
+        k = np.array(spec.weights[tuple(idx)])
+        if axis != spec.ndim - 1:
+            k[r] = 0.0
+        kernels.append(k)
+    return kernels
+
+
+def band_density(radius: int, L: int) -> float:
+    """Non-zero density of the (unpadded) kernel matrix: (2r+1)/(2r+L)."""
+    return (2 * radius + 1) / (2 * radius + L)

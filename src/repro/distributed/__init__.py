@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (ShardingRules, default_rules,
+                                        param_shardings, constrain,
+                                        use_mesh_rules, spec_for)
+
+__all__ = ["ShardingRules", "default_rules", "param_shardings", "constrain",
+           "use_mesh_rules", "spec_for"]

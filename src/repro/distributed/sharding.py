@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Model code annotates parameters and activations with *logical* axis names;
+this module maps them onto physical mesh axes. A rule set is a dict
+``logical_name -> mesh axis | tuple | None``. Separate namespaces for params
+and activations: the same model dim (e.g. embed) is FSDP-sharded in storage
+but replicated (or TP-sharded) in compute.
+
+Robustness: when a logical dim is not divisible by its mapped mesh-axis
+product, or the mesh axis is already consumed by an earlier dim of the same
+tensor, the rule silently degrades to replication for that dim — every
+(arch x shape x mesh) cell must *lower*, and the roofline table then shows
+the cost of any degraded sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    params: Dict[str, Any]
+    acts: Dict[str, Any]
+
+
+def default_rules(fsdp: bool = True, multi_pod: bool = False) -> ShardingRules:
+    """DP over (pod, data); TP over model; FSDP params over data; EP over
+    model where divisible (divisibility fallback otherwise)."""
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    params = {
+        "embed": "data" if fsdp else None,   # ZeRO-3 weight shard
+        "vocab": "model",
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head": None,
+        "mlp": "model",
+        "experts": "model",                  # EP when divisible
+        "heads": None,                       # ssm per-head scalars
+        "conv": None,
+        "layers": None,
+        "seq": None,
+    }
+    acts = {
+        "batch": batch_axes,
+        "seq": None,                         # flip to "data" for SP
+        "embed": None,                       # replicated over model (Megatron)
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "kv_seq": None,
+        "group": batch_axes,                 # MoE dispatch groups
+    }
+    return ShardingRules(params=params, acts=acts)
+
+
+def sp_rules(fsdp: bool = True, multi_pod: bool = False) -> ShardingRules:
+    """Sequence-parallel variant: shards the sequence dim over 'model' for
+    the long-context cells (batch too small to fill the mesh)."""
+    r = default_rules(fsdp=fsdp, multi_pod=multi_pod)
+    acts = dict(r.acts)
+    acts["seq"] = "model"
+    acts["kv_seq"] = "model"
+    return ShardingRules(params=r.params, acts=acts)
+
+
+# Logical dims allowed to absorb the 'model' axis when the primary TP dim
+# (q/kv heads) is not divisible by it — e.g. whisper's 20 heads or GQA
+# kv=8 on a 16-way model axis. Sharding d_head instead keeps the KV cache
+# and attention weights distributed; GSPMD inserts the head-dim partial-sum.
+FALLBACK_TO_MODEL = ("head",)
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             rules: Dict[str, Any], mesh: Mesh,
+             head_fallback: bool = False) -> P:
+    """Build a PartitionSpec with divisibility + axis-reuse fallback.
+
+    head_fallback: let d_head absorb an unused 'model' axis — ONLY for
+    decode graphs (it shrinks replicated KV caches ~16x when kv_heads
+    doesn't divide TP), measured HARMFUL for train/prefill (GSPMD inserts
+    involuntary-full-remat reshards on the QK^T path; granite train_4k
+    collective 10.9s -> 29.2s). See EXPERIMENTS.md §Perf iteration A0.
+    """
+    used = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        mapped = rules.get(name) if name else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        cand = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        total = int(np.prod([mesh.shape[a] for a in cand])) if cand else 1
+        if not cand or total <= 1 or dim % total != 0:
+            parts.append(None)
+            continue
+        used.update(cand)
+        parts.append(cand[0] if len(cand) == 1 else cand)
+    # second pass: if 'model' went unused, let a fallback dim absorb it
+    if head_fallback and "model" in mesh.shape and "model" not in used:
+        for i, (dim, name) in enumerate(zip(shape, axes)):
+            if (parts[i] is None if i < len(parts) else True) and \
+                    name in FALLBACK_TO_MODEL and \
+                    dim % mesh.shape["model"] == 0:
+                while len(parts) <= i:
+                    parts.append(None)
+                parts[i] = "model"
+                break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(axes: Any, shapes: Any, rules: ShardingRules,
+                    mesh: Mesh, head_fallback: bool = False) -> Any:
+    """Tree of NamedShardings for a param tree (axes tree + ShapeDtypeStruct
+    tree from eval_shape)."""
+    return jax.tree.map(
+        lambda ax, sd: NamedSharding(
+            mesh, spec_for(ax, sd.shape, rules.params, mesh,
+                           head_fallback=head_fallback)),
+        axes, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# -- activation constraints (context-scoped) --------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: ShardingRules):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    """with_sharding_constraint by logical names; no-op outside a mesh ctx."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(axes, x.shape, rules.acts, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,25 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels unless running on a real TPU.
+
+    This container is CPU-only; TPU v5e is the *target*. interpret=True
+    executes the kernel body in Python for bit-level validation against the
+    ref.py oracles; on TPU the same pallas_call lowers to Mosaic.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# TPU v5e hardware tiling constants (target hardware).
+LANES = 128          # minor-most dim of a VREG / MXU edge
+SUBLANES = 8         # second-minor dim of a VREG (fp32)
+MXU = 128            # systolic array edge
+VMEM_BYTES = 128 * 1024 * 1024

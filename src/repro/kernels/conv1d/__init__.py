@@ -1,0 +1,4 @@
+from repro.kernels.conv1d.ops import conv1d_causal
+from repro.kernels.conv1d.ref import conv1d_causal_ref
+
+__all__ = ["conv1d_causal", "conv1d_causal_ref"]

@@ -1,0 +1,23 @@
+"""Jitted wrapper: depthwise causal conv1d."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.conv1d.kernel import conv1d_causal_call
+
+
+def conv1d_causal(x, w, *, block_t: int = 256,
+                  interpret: bool | None = None):
+    """x (B, T, D); w (K, D) -> (B, T, D)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    d = x.shape[-1]
+    d_pad = common.round_up(d, common.LANES)
+    if d_pad != d:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, d_pad - d)))
+        w = jnp.pad(w, ((0, 0), (0, d_pad - d)))
+    y = conv1d_causal_call(x, w, block_t=block_t, interpret=interpret)
+    return y[:, :, :d]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: depthwise causal conv1d (per-channel 1-D stencil)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv1d_causal_ref(x, w):
+    """x (B, T, D); w (K, D) -> (B, T, D).
+
+    y[b, t, d] = sum_k w[k, d] * x[b, t - K + 1 + k, d]  (zero history).
+    This is the Mamba2/Zamba2 short conv — a radius-(K-1) one-sided 1-D
+    stencil applied independently per channel.
+    """
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    t = x.shape[1]
+    acc = jnp.zeros_like(x)
+    for i in range(k):
+        acc = acc + w[i][None, None, :] * xp[:, i:i + t, :]
+    return acc

@@ -1,0 +1,39 @@
+"""Engine backend -> Pallas kernel builders."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import StencilSpec
+
+
+def build(spec: StencilSpec, backend: str, L: int) -> Callable:
+    """Whole-stencil applicator for the 'pallas_direct' backend."""
+    if backend != "pallas_direct":
+        raise ValueError(f"dispatch.build handles pallas_direct, got {backend}")
+    from repro.kernels.stencil_direct.ops import stencil1d, stencil2d
+
+    w = np.asarray(spec.weights)
+    r = spec.radius
+
+    if spec.ndim == 1:
+        return lambda x: stencil1d(w, x)
+
+    if spec.ndim == 2:
+        return lambda x: stencil2d(w, x)
+
+    # 3-D: decompose the leading axis (paper §3.2.1 row decomposition,
+    # lifted one dimension): y[a] = sum_u  stencil2d(w[u]) applied to x[a+u].
+    def fn3d(x):
+        n1 = x.shape[0] - 2 * r
+        acc = None
+        for u in range(2 * r + 1):
+            if not np.any(w[u] != 0):
+                continue
+            part = jax.vmap(lambda s, wu=w[u]: stencil2d(wu, s))(x[u:u + n1])
+            acc = part if acc is None else acc + part
+        return acc
+    return fn3d

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: 2:4-compressed SpMM (simulated Sparse Tensor Core).
+
+Faithful executable semantics of ``mma.sp``: per output row i and 4-wide
+reduction segment s, only the two RHS rows selected by the 2-bit metadata
+contribute. TPU has no SpTC, so the kernel realizes the selection as an
+in-VMEM decompression (VPU one-hot expansion over the tiny K dim — the
+metadata is typically static stencil structure) followed by a dense MXU
+matmul over the N (free) dimension, which is where the FLOPs are.
+
+Blocking: the compressed operand (M, K/2) and metadata are tiny (M = L =
+2r+2, K = 2L) and live whole in VMEM; the RHS/output are tiled over N in
+128-lane multiples — BlockSpec (K, bn) / (M, bn).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import round_up
+
+
+def _sptc_kernel(values_ref, meta_ref, x_ref, y_ref, *, k: int):
+    vals = values_ref[:]                       # (M, K/2)
+    meta = meta_ref[:]                         # (M, K/2) int32
+    x = x_ref[:]                               # (K, bn)
+    m, kh = vals.shape
+    # gather index per compressed slot: 4*segment + 2-bit position
+    seg = (jax.lax.broadcasted_iota(jnp.int32, (m, kh), 1) // 2) * 4
+    gidx = seg + meta                          # (M, K/2)
+    # In-VMEM decompression: scatter values to their K positions via one-hot.
+    # K is tiny (= 2L); this is VPU work, the MXU then runs the dense dot.
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (m, kh, k), 2)
+    onehot = (gidx[:, :, None] == kpos).astype(vals.dtype)
+    w = jnp.sum(vals[:, :, None] * onehot, axis=1)          # (M, K)
+    y_ref[:] = jnp.dot(w, x, preferred_element_type=jnp.float32
+                       ).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sptc_spmm_call(values, meta, x, *, block_n: int = 512,
+                   interpret: bool = True):
+    """y = SpTC(values, meta) @ x.   values/meta: (M, K/2); x: (K, N)."""
+    m, kh = values.shape
+    k, n = x.shape
+    if kh * 2 != k:
+        raise ValueError(f"K/2 mismatch: values {kh} vs x K={k}")
+    bn = min(block_n, round_up(n, 128))
+    n_pad = round_up(n, bn)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+    grid = (n_pad // bn,)
+    y = pl.pallas_call(
+        functools.partial(_sptc_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, kh), lambda i: (0, 0)),     # compressed values
+            pl.BlockSpec((m, kh), lambda i: (0, 0)),     # metadata
+            pl.BlockSpec((k, bn), lambda i: (0, i)),     # RHS N-tile
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), x.dtype),
+        interpret=interpret,
+    )(values.astype(x.dtype), meta.astype(jnp.int32), x)
+    return y[:, :n]

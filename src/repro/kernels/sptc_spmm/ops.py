@@ -1,0 +1,33 @@
+"""Jitted public wrappers for the 2:4 compressed SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.sptc_spmm.kernel import sptc_spmm_call
+
+
+def sptc_spmm(values, meta, x, *, block_n: int = 512,
+              interpret: bool | None = None):
+    """Compressed (M, K/2) x (K, N) -> (M, N)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    return sptc_spmm_call(jnp.asarray(values), jnp.asarray(meta),
+                          jnp.asarray(x), block_n=block_n,
+                          interpret=interpret)
+
+
+def sptc_spmm_windows(values, meta, windows, *, block_n: int = 512,
+                      interpret: bool | None = None):
+    """Batched over the leading tile axis: (T, K, N) -> (T, M, N).
+
+    vmap adds the tile axis as an outer grid dimension of the pallas_call.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    values = jnp.asarray(values)
+    meta = jnp.asarray(meta)
+    fn = lambda w: sptc_spmm_call(values, meta, w, block_n=block_n,
+                                  interpret=interpret)
+    return jax.vmap(fn)(jnp.asarray(windows))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the 2:4 compressed SpMM (simulated SpTC semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sptc import sptc_matmul
+
+
+def sptc_spmm_ref(values, meta, x):
+    """(M, K/2) values + metadata  x  (K, N)  ->  (M, N)."""
+    return sptc_matmul(values, meta, x)
+
+
+def sptc_spmm_windows_ref(values, meta, windows):
+    """Batched over leading tile axis: windows (T, K, N) -> (T, M, N)."""
+    import jax
+    return jax.vmap(lambda w: sptc_matmul(values, meta, w))(windows)

@@ -1,0 +1,4 @@
+from repro.kernels.stencil_direct.ops import stencil1d, stencil2d
+from repro.kernels.stencil_direct.ref import stencil2d_ref
+
+__all__ = ["stencil1d", "stencil2d", "stencil2d_ref"]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: tiled direct (VPU) 2-D stencil with DMA halo loads.
+
+This is the TPU bandwidth-roofline kernel. The input stays in HBM
+(``pl.ANY``); each grid step DMAs one (th + 2rh, W + 2rw) halo row-block
+into a VMEM scratch buffer — the overlapping halo rows are re-read from HBM
+exactly as a GPU kernel re-reads them into shared memory — then the output
+tile is accumulated with statically-unrolled shifted FMAs (one VPU
+multiply-add per non-zero tap; star stencils skip their zero taps at trace
+time). The stencil weights are compile-time constants, matching the paper's
+observation that the kernel matrix is static structure, not data.
+
+Roofline: for an H x W fp32 grid the kernel moves ~4(H W) bytes in + 4(H W)
+out (+ halo), and performs taps x H x W FMAs — memory-bound for r <= 2,
+VPU-compute-bound for box r >= 3 (analysis in core/analysis.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stencil_kernel(x_hbm, y_ref, scratch, sem, *, taps, th, w_out, rh, rw):
+    i = pl.program_id(0)
+    rows = th + 2 * rh
+    cp = pltpu.make_async_copy(
+        x_hbm.at[pl.ds(i * th, rows), :], scratch, sem)
+    cp.start()
+    cp.wait()
+    acc = jnp.zeros((th, w_out), dtype=jnp.float32)
+    for (u, v, wt) in taps:                     # statically unrolled VPU FMAs
+        acc = acc + wt * scratch[u:u + th, v:v + w_out].astype(jnp.float32)
+    y_ref[:] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("taps", "rh", "rw", "th", "interpret"))
+def stencil2d_call(x, *, taps, rh: int, rw: int, th: int = 128,
+                   interpret: bool = True):
+    """Apply a 2-D stencil. x: (H + 2rh, W + 2rw) -> (H, W).
+
+    ``taps`` is a static tuple of (u, v, weight) non-zero stencil entries.
+    Caller is responsible for lane padding of W (ops.py handles it).
+    """
+    h_in, w_in = x.shape
+    h_out = h_in - 2 * rh
+    w_out = w_in - 2 * rw
+    grid_h = -(-h_out // th)
+    # pad rows so the final tile's halo DMA stays in bounds
+    h_need = grid_h * th + 2 * rh
+    if h_need > h_in:
+        x = jnp.pad(x, ((0, h_need - h_in), (0, 0)))
+    y = pl.pallas_call(
+        functools.partial(_stencil_kernel, taps=taps, th=th,
+                          w_out=w_out, rh=rh, rw=rw),
+        grid=(grid_h,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((th, w_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid_h * th, w_out), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((th + 2 * rh, w_in), x.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(x)
+    return y[:h_out]

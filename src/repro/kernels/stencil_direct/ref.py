@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: direct shifted multiply-add stencil (1-D/2-D)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def stencil2d_ref(weights: np.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """weights (2rh+1, 2rw+1); x (H+2rh, W+2rw) -> (H, W)."""
+    kh, kw = weights.shape
+    h = x.shape[0] - (kh - 1)
+    w = x.shape[1] - (kw - 1)
+    acc = jnp.zeros((h, w), dtype=x.dtype)
+    for u in range(kh):
+        for v in range(kw):
+            if weights[u, v] != 0:
+                acc = acc + jnp.asarray(weights[u, v], x.dtype) * x[u:u + h, v:v + w]
+    return acc

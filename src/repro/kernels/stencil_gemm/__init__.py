@@ -1,0 +1,4 @@
+from repro.kernels.stencil_gemm.ops import windows_gemm
+from repro.kernels.stencil_gemm.ref import windows_gemm_ref
+
+__all__ = ["windows_gemm", "windows_gemm_ref"]

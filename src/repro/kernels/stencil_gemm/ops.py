@@ -1,0 +1,15 @@
+"""Jitted wrapper for the dense windows-GEMM stencil executor."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.stencil_gemm.kernel import windows_gemm_call
+
+
+def windows_gemm(km, windows, *, block_n: int = 512,
+                 interpret: bool | None = None):
+    if interpret is None:
+        interpret = common.default_interpret()
+    return windows_gemm_call(jnp.asarray(km), jnp.asarray(windows),
+                             block_n=block_n, interpret=interpret)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the windows x kernel-matrix GEMM stencil."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def windows_gemm_ref(km, windows):
+    """km (L, K); windows (T, K, C) -> (T, L, C)."""
+    return jnp.einsum("lk,tkc->tlc", km, windows,
+                      preferred_element_type=jnp.float32
+                      ).astype(windows.dtype)

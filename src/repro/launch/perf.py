@@ -1,0 +1,126 @@
+"""§Perf hillclimb driver: lower one cell under a named variant and report
+the three roofline terms — the measurement half of the hypothesis ->
+change -> measure -> validate loop (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen3-1.7b \
+        --cell train_4k --variant mesh64x4
+
+Variants are combinations of mesh shape, sharding rules, remat policy and
+microbatching — the knobs the hypothesis log iterates over.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse                                                  # noqa: E402
+import json                                                      # noqa: E402
+from typing import Any, Dict, Optional                           # noqa: E402
+
+from repro.configs.base import SHAPE_BY_NAME                     # noqa: E402
+from repro.configs.registry import get_config                    # noqa: E402
+from repro.distributed.sharding import (ShardingRules,           # noqa: E402
+                                        default_rules, sp_rules)
+from repro.launch.dryrun import lower_cell                       # noqa: E402
+from repro.training.train_step import TrainConfig                # noqa: E402
+
+
+def variant_kwargs(name: str, arch: str) -> Dict[str, Any]:
+    """Named experiment variants (single-pod, 256 chips unless noted)."""
+    cfg = get_config(arch)
+    v: Dict[str, Any] = {"multi_pod": False, "extra_tag": f"/{name}"}
+    if "+" in name:                               # composition a+b (first!)
+        out: Dict[str, Any] = {"multi_pod": False, "extra_tag": f"/{name}"}
+        merged_cfg = cfg
+        for part in name.split("+"):
+            pv = variant_kwargs(part, arch)
+            if "cfg_override" in pv:
+                delta = {f: getattr(pv["cfg_override"], f)
+                         for f in ("remat_policy", "sliding_window",
+                                   "attn_block_kv", "remat",
+                                   "banded_attention", "attn_block_q",
+                                   "moe_dispatch_dtype", "moe_group")
+                         if getattr(pv["cfg_override"], f) !=
+                         getattr(cfg, f)}
+                merged_cfg = merged_cfg.scaled(**delta)
+                out["cfg_override"] = merged_cfg
+            for k2 in ("mesh_override", "tc", "rules"):
+                if k2 in pv:
+                    out[k2] = pv[k2]
+        return out
+    if name == "baseline":
+        pass
+    elif name.startswith("mesh"):                 # mesh64x4, mesh2x32x8, ...
+        dims = [int(x) for x in name[4:].split("x")]
+        if len(dims) == 3:                        # multi-pod variant
+            v["mesh_override"] = (tuple(dims), ("pod", "data", "model"))
+            v["multi_pod"] = True
+        else:
+            v["mesh_override"] = (tuple(dims), ("data", "model"))
+    elif name == "remat_dots":
+        v["cfg_override"] = cfg.scaled(remat_policy="dots")
+    elif name == "remat_none":
+        v["cfg_override"] = cfg.scaled(remat=False)
+    elif name.startswith("mb") and name.endswith("gc"):   # mb1gc: mb + bf16
+        v["tc"] = TrainConfig(microbatches=int(name[2:-2]),
+                              grad_compress=True)
+    elif name.startswith("mb"):                   # mb1, mb8, mb16
+        v["tc"] = TrainConfig(microbatches=int(name[2:]))
+    elif name == "grad_compress":
+        v["tc"] = TrainConfig(microbatches=4, grad_compress=True)
+    elif name == "seqpar":
+        v["rules"] = sp_rules()
+    elif name == "banded":                        # SWA band-skip attention
+        v["cfg_override"] = cfg.scaled(banded_attention=True)
+    elif name.startswith("bq"):                   # bq1024: banded q-chunk
+        v["cfg_override"] = cfg.scaled(banded_attention=True,
+                                       attn_block_q=int(name[2:]))
+    elif name.startswith("swa"):                  # swa1024: shrink window
+        v["cfg_override"] = cfg.scaled(sliding_window=int(name[3:]))
+    elif name.startswith("blockkv"):              # blockkv4096
+        v["cfg_override"] = cfg.scaled(attn_block_kv=int(name[7:]))
+    elif name == "moebf16":                       # bf16 dispatch one-hots
+        v["cfg_override"] = cfg.scaled(moe_dispatch_dtype="bfloat16")
+    elif name.startswith("moegroup"):             # moegroup256
+        v["cfg_override"] = cfg.scaled(moe_group=int(name[8:]))
+    else:
+        raise ValueError(f"unknown variant {name}")
+    return v
+
+
+def run_variant(arch: str, cell_name: str, variant: str,
+                out_path: Optional[str] = None) -> Dict:
+    cell = SHAPE_BY_NAME[cell_name]
+    kw = variant_kwargs(variant, arch)
+    rec = lower_cell(arch, cell, **kw)
+    rec["variant"] = variant
+    line = (f"{arch} x {cell_name} [{variant}]: "
+            f"compute {rec['t_compute_s']:.3f}s  "
+            f"memory {rec['t_memory_s']:.3f}s  "
+            f"collective {rec['t_collective_s']:.3f}s  "
+            f"-> {rec['bottleneck']}  mfu@roof {rec['mfu_at_roofline']:.3f}  "
+            f"perdev {rec['per_device_gb']:.1f}GB "
+            f"(compile {rec['compile_s']}s)")
+    print(line, flush=True)
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", default="baseline", nargs="+")
+    ap.add_argument("--out", default="results/perf_iterations.jsonl")
+    args = ap.parse_args()
+    for v in args.variant:
+        try:
+            run_variant(args.arch, args.cell, v, args.out)
+        except Exception as e:                    # noqa: BLE001
+            print(f"{args.arch} x {args.cell} [{v}]: FAILED {e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models import layers, model, nn, ssm
+__all__ = ["layers", "model", "nn", "ssm"]

@@ -1,0 +1,396 @@
+"""Composable transformer components: norms, RoPE, GQA attention (plain,
+blocked-flash, decode), MLPs, and capacity-based MoE.
+
+Conventions:
+  activations bf16 (cfg.dtype), softmax/norm statistics fp32;
+  q/k/v laid out (B, S, H, Dh); GQA groups G = n_heads // n_kv_heads;
+  logical axis names on params: embed, q_heads, kv_heads, head, mlp,
+  experts, vocab.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.nn import ParamBuilder
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(pb: ParamBuilder, cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": pb.param("scale", (d,), ("embed",), init="ones")}
+    if cfg.norm == "ln":
+        p["bias"] = pb.param("bias", (d,), ("embed",), init="zeros")
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if cfg.norm == "ln":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """qk-norm (Qwen3): RMS over the head dim."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, d_rot: int):
+    exp = np.arange(0, d_rot, 2, dtype=np.float64) / d_rot
+    return jnp.asarray(1.0 / (cfg.rope_theta ** exp), jnp.float32)
+
+
+def apply_rope(x, pos, cfg: ModelConfig):
+    """x (..., S, H, D); pos (..., S) int32. Rotates the first
+    rope_fraction * D dims (ChatGLM3's 2d-RoPE rotates half)."""
+    d = x.shape[-1]
+    d_rot = int(cfg.rope_fraction * d)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    freqs = rope_freqs(cfg, d_rot)                     # (d_rot/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, d_rot/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rot = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(pb: ParamBuilder, cfg: ModelConfig, cross: bool = False):
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": pb.param("wq", (d, h, dh), ("embed", "q_heads", "head")),
+        "wk": pb.param("wk", (d, kh, dh), ("embed", "kv_heads", "head")),
+        "wv": pb.param("wv", (d, kh, dh), ("embed", "kv_heads", "head")),
+        "wo": pb.param("wo", (h, dh, d), ("q_heads", "head", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = pb.param("q_norm", (dh,), ("head",), init="ones")
+        p["k_norm"] = pb.param("k_norm", (dh,), ("head",), init="ones")
+    if cross:
+        p["gate"] = pb.param("gate", (), (), init="zeros")  # tanh-gated xattn
+    return p
+
+
+def _qkv(p, x, ctx, cfg: ModelConfig, q_pos, kv_pos, rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", ctx, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", ctx, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(q, q_pos, cfg)
+        k = apply_rope(k, kv_pos, cfg)
+    return q, k, v
+
+
+def blocked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
+                      window: Optional[int], block_kv: int = 1024):
+    """Flash-style attention: lax.scan over KV blocks with online softmax.
+
+    q (B,S,H,D); k,v (B,T,Kh,D); positions int32. Memory O(S * block_kv)
+    instead of O(S*T) — required for the 32k prefill cells.
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qf = (q * scale).reshape(b, s, kh, g, d)
+
+    nblk = -(-t // block_kv)
+    t_pad = nblk * block_kv
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, t_pad - t)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(b, nblk, block_kv, kh, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block_kv, kh, d).transpose(1, 0, 2, 3, 4)
+    pb_ = kv_pos.reshape(b, nblk, block_kv).transpose(1, 0, 2)
+
+    m0 = jnp.full((b, s, kh, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, s, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, s, kh, g, d), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk                       # (B,bk,Kh,D), (B,bk)
+        sc = jnp.einsum("bskgd,btkd->bskgt", qf, kc,
+                        preferred_element_type=jnp.float32)
+        msk = jnp.ones((b, s, 1, 1, kc.shape[1]), bool)
+        if causal:
+            msk &= (pc[:, None, None, None, :] <= q_pos[:, :, None, None, None])
+        if window is not None:
+            msk &= (pc[:, None, None, None, :] >
+                    q_pos[:, :, None, None, None] - window)
+        msk &= (pc != jnp.iinfo(jnp.int32).max)[:, None, None, None, :]
+        sc = jnp.where(msk, sc, -jnp.inf)
+        m_new = jnp.maximum(m, sc.max(-1))
+        # guard all-masked rows
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        pexp = jnp.exp(sc - m_safe[..., None])
+        pexp = jnp.where(msk, pexp, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + pexp.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", pexp.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb_))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def banded_attention(q, k, v, q_pos, kv_pos, *, window: int,
+                     block_q: int = 512):
+    """Sliding-window attention that SKIPS out-of-band KV — the paper's
+    structural-sparsity insight applied one level up (§Perf optimization).
+
+    For a query chunk [qs, qs+Bq) under a causal window W, the entire
+    receptive field lies in kv[qs+Bq-L, qs+Bq) with static L = Bq + W, so
+    each chunk needs ONE end-aligned dynamic slice and ONE exact softmax —
+    no online-softmax carry, no O(S/Bkv) scan over masked-out blocks.
+    Compute and KV traffic drop from O(S^2) to O(S(W+Bq)).
+
+    Requires contiguous positions (train/prefill self-attention).
+    q (B,S,H,D); k,v (B,T,Kh,D). Returns (B,S,H,D).
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    L = block_q + window
+    nq = -(-s // block_q)
+    s_pad = nq * block_q
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, s_pad - s)),
+                        constant_values=jnp.iinfo(jnp.int32).max - 1)
+    if t < L:                                   # left-pad so slices exist
+        k = jnp.pad(k, ((0, 0), (L - t, 0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (L - t, 0), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (L - t, 0)),
+                         constant_values=-1)
+    qf = (q * scale).reshape(b, nq, block_q, kh, g, d).transpose(
+        1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(b, nq, block_q).transpose(1, 0, 2)
+
+    def chunk(i, qc, qpc):
+        # end-aligned band; clamp explicitly (traced negative starts WRAP
+        # in dynamic_slice, they do not clamp)
+        start = jnp.clip(i * block_q + block_q - L, 0, k.shape[1] - L)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+        pc = jax.lax.dynamic_slice_in_dim(kv_pos, start, L, axis=1)
+        sc = jnp.einsum("bskgd,btkd->bskgt", qc, kc,
+                        preferred_element_type=jnp.float32)
+        msk = (pc[:, None, None, None, :] <= qpc[:, :, None, None, None])
+        msk &= (pc[:, None, None, None, :] >
+                qpc[:, :, None, None, None] - window)
+        msk &= (pc >= 0)[:, None, None, None, :]
+        sc = jnp.where(msk, sc, -jnp.inf)
+        mx = jnp.max(sc, axis=-1, keepdims=True)
+        mx = jnp.where(jnp.isinf(mx), 0.0, mx)
+        p = jnp.exp(sc - mx)
+        p = jnp.where(msk, p, 0.0)
+        l = jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+        return jnp.einsum("bskgt,btkd->bskgd", (p / l).astype(vc.dtype), vc,
+                          preferred_element_type=jnp.float32)
+
+    def body(_, xs):
+        i, qc, qpc = xs
+        return None, chunk(i, qc, qpc)
+
+    _, out = jax.lax.scan(body, None,
+                          (jnp.arange(nq, dtype=jnp.int32), qf, qp))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s_pad, h, d)
+    return out[:, :s].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, kv_pos, *, window,
+                     causal: bool = True):
+    """Single-token attention over a cache. q (B,1,H,D); caches (B,T,Kh,D).
+
+    causal=False (cross-attention over encoder/image memory) masks only
+    invalid (kv_pos < 0) slots.
+    """
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    qf = (q * (1.0 / math.sqrt(d))).reshape(b, 1, kh, g, d)
+    sc = jnp.einsum("bskgd,btkd->bskgt", qf, k_cache,
+                    preferred_element_type=jnp.float32)
+    msk = kv_pos[:, None, None, None, :] >= 0
+    if causal:
+        msk &= kv_pos[:, None, None, None, :] <= q_pos[:, :, None, None, None]
+    if window is not None:
+        msk &= (kv_pos[:, None, None, None, :] >
+                q_pos[:, :, None, None, None] - window)
+    sc = jnp.where(msk, sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_core(q, k, v, q_pos, kv_pos, cfg: ModelConfig, *,
+                   causal: bool, block_kv: int = 1024):
+    """Dispatch: banded SWA fast path (when enabled) or blocked/flash."""
+    window = cfg.sliding_window if causal else None
+    if (causal and window and cfg.banded_attention
+            and q.shape[1] > 1 and q.shape[1] == k.shape[1]):
+        return banded_attention(q, k, v, q_pos, kv_pos, window=window,
+                                block_q=cfg.attn_block_q)
+    return blocked_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                             window=window, block_kv=block_kv)
+
+
+def attention(p, x, cfg: ModelConfig, *, q_pos, ctx=None, kv_pos=None,
+              causal=True, rope=True, block_kv: int = 1024):
+    """Full (self- or cross-) attention for train/prefill."""
+    ctx_in = x if ctx is None else ctx
+    if kv_pos is None:
+        kv_pos = q_pos
+    q, k, v = _qkv(p, x, ctx_in, cfg, q_pos, kv_pos, rope)
+    o = attention_core(q, k, v, q_pos, kv_pos, cfg, causal=causal,
+                       block_kv=block_kv)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(y.dtype)) * y
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(pb: ParamBuilder, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w1": pb.param("w1", (d, f), ("embed", "mlp")),
+            "w3": pb.param("w3", (d, f), ("embed", "mlp")),
+            "w2": pb.param("w2", (f, d), ("mlp", "embed")),
+        }
+    return {
+        "w1": pb.param("w1", (d, f), ("embed", "mlp")),
+        "w2": pb.param("w2", (f, d), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-based einsum dispatch — GShard/MaxText style)
+# ---------------------------------------------------------------------------
+
+def init_moe(pb: ParamBuilder, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": pb.param("router", (d, e), ("embed", "experts")),
+        "w1": pb.param("w1", (e, d, f), ("experts", "embed", "mlp")),
+        "w3": pb.param("w3", (e, d, f), ("experts", "embed", "mlp")),
+        "w2": pb.param("w2", (e, f, d), ("experts", "mlp", "embed")),
+    }
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, group: int) -> int:
+    cap = int(math.ceil(group * cfg.top_k * cfg.capacity_factor
+                        / cfg.n_experts))
+    return max(8, -(-cap // 8) * 8)
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x (B, S, D) -> (B, S, D), plus aux load-balancing loss.
+
+    Tokens are routed in groups of cfg.moe_group (bounds the dispatch
+    tensor); overflow beyond expert capacity is dropped (capacity_factor).
+    Dispatch/combine are one-hot einsums — under EP sharding these lower to
+    all-to-all collectives.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    nt = b * s
+    grp = min(cfg.moe_group, nt)
+    n_grp = -(-nt // grp)
+    pad = n_grp * grp - nt
+    xf = x.reshape(nt, d)
+    if pad:                     # pad tokens fill the tail dispatch group
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xt = xf.reshape(n_grp, grp, d)
+
+    logits = jnp.einsum("gnd,de->gne", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                    # (g,n,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = moe_capacity(cfg, grp)
+    ddt = jnp.bfloat16 if cfg.moe_dispatch_dtype == "bfloat16" \
+        else jnp.float32
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.float32)             # (g,n,k,e)
+    # position of each (token, choice) in its expert's buffer
+    pos_in_exp = (jnp.cumsum(sel.reshape(n_grp, grp * k, e), axis=1)
+                  .reshape(n_grp, grp, k, e) - 1.0)
+    keep = (pos_in_exp < cap) & (sel > 0)
+    pos_oh = jax.nn.one_hot(pos_in_exp.astype(jnp.int32), cap,
+                            dtype=ddt) * keep[..., None].astype(ddt)
+    disp = pos_oh.sum(2)                                         # (g,n,e,c)
+    comb = jnp.einsum("gnke,gnkec->gnec",
+                      (gate_vals[..., None] * keep).astype(ddt), pos_oh,
+                      preferred_element_type=jnp.float32)
+
+    xe = jnp.einsum("gnec,gnd->gecd", disp.astype(x.dtype), xt)  # (g,e,c,d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w1"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w3"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(x.dtype))
+    y = jnp.einsum("gnec,gecd->gnd", comb.astype(x.dtype), ye)
+
+    # Switch-style load-balancing aux loss
+    me = probs.mean(axis=1)                                      # (g,e)
+    ce = sel.sum(2).mean(axis=1)                                 # (g,e)
+    aux = (me * ce).sum(-1).mean() * e
+    y = y.reshape(n_grp * grp, d)
+    if pad:
+        y = y[:nt]
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,116 @@
+"""Minimal functional module system: param pytrees + logical-axis metadata.
+
+No flax dependency. Parameters are nested dicts of arrays; every leaf has a
+tuple of *logical axis names* recorded in a parallel tree during init. The
+distribution layer (distributed/sharding.py) maps logical names to mesh axes
+(MaxText-style logical-axis rules), so a config can flip DP/FSDP/TP/EP without
+touching model code.
+
+Init functions run under ``jax.eval_shape`` for the dry-run — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Tuple[str | None, ...]
+
+
+class ParamBuilder:
+    """Creates parameters with deterministic per-path RNG and records axes."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32, path: str = "",
+                 axes: dict | None = None):
+        self._key = key
+        self.dtype = dtype
+        self._path = path
+        # the axes dict is SHARED by all sub-builders; keys are /-paths
+        self.axes: Dict[str, Axes] = axes if axes is not None else {}
+
+    def sub(self, name: str) -> "ParamBuilder":
+        return ParamBuilder(self._key, self.dtype,
+                            f"{self._path}/{name}", self.axes)
+
+    def layer(self, i) -> "ParamBuilder":
+        """Per-layer builder: distinct RNG stream, *same* path (for scan
+        stacking the axes are recorded once, identically across layers)."""
+        return ParamBuilder(jax.random.fold_in(self._key, i), self.dtype,
+                            self._path, self.axes)
+
+    def _fold(self, name: str) -> jax.Array:
+        path = f"{self._path}/{name}"
+        h = np.uint32(np.frombuffer(
+            path.encode(), dtype=np.uint8).sum() * 2654435761 % (2**31))
+        return jax.random.fold_in(self._key, h)
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Axes,
+              init: str = "normal", scale: float | None = None) -> jax.Array:
+        if len(axes) != len(shape):
+            raise ValueError(f"{self._path}/{name}: axes {axes} vs shape {shape}")
+        self.axes[f"{self._path}/{name}"] = axes
+        k = self._fold(name)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if scale is None:
+            # fan-in scaling over contracted (leading) dims
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(k, shape) * scale).astype(self.dtype)
+
+
+def tree_paths(tree: Params, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    for k, v in tree.items():
+        p = f"{prefix}/{k}"
+        if isinstance(v, dict):
+            out.update(tree_paths(v, p))
+        else:
+            out[p] = v
+    return out
+
+
+def axes_tree(params: Params, axes: Dict[str, Axes]) -> Params:
+    """Build a tree with the same structure as ``params`` holding axis tuples.
+
+    Stacked (scanned) layer params get a leading 'layers' axis automatically
+    when the recorded tuple is one shorter than the array rank.
+    """
+    def rec(tree: Params, prefix: str) -> Params:
+        out = {}
+        for k, v in tree.items():
+            p = f"{prefix}/{k}"
+            if isinstance(v, dict):
+                out[k] = rec(v, p)
+            else:
+                ax = axes.get(p)
+                if ax is None:
+                    raise KeyError(f"no axes recorded for {p}")
+                ax = tuple(ax)
+                while len(ax) < v.ndim:       # stacked (scanned) layer dims
+                    ax = ("layers",) + ax
+                if len(ax) != v.ndim:
+                    raise ValueError(f"{p}: rank {v.ndim} vs axes {ax}")
+                out[k] = tuple(ax)
+        return out
+    return rec(params, "")
+
+
+def stack_init(init_one: Callable[[ParamBuilder, int], Params], n: int,
+               pb: ParamBuilder) -> Params:
+    """Initialize ``n`` structurally-identical layers stacked on axis 0.
+
+    The per-layer init runs under vmap over the layer index so the result is
+    a single pytree with a leading (n, ...) axis — the form lax.scan consumes.
+    """
+    return jax.vmap(lambda i: init_one(pb.layer(i), i))(jnp.arange(n))
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

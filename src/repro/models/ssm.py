@@ -1,0 +1,189 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training uses the chunked SSD algorithm: within-chunk "attention form"
+(C B^T masked by cumulative decays) + an inter-chunk recurrent state pass —
+O(T Q) memory instead of O(T^2) or O(T·P·N) materialized states.
+Decoding is the O(1) recurrence on a (H, P, N) state.
+
+The depthwise causal conv (width 4) over (x, B, C) is a per-channel 1-D
+stencil — the framework integration point of the paper's technique
+(kernels/conv1d; cfg.use_pallas switches the Pallas kernel in-graph).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.nn import ParamBuilder
+from repro.models import layers as L
+
+
+def init_mamba(pb: ParamBuilder, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = di + 2 * n                   # x, B, C share the conv (groups=1)
+    return {
+        "in_proj": pb.param("in_proj", (d, 2 * di + 2 * n + h),
+                            ("embed", "mlp")),
+        "conv_w": pb.param("conv_w", (cfg.conv_width, conv_ch),
+                           ("conv", "mlp")),
+        "conv_b": pb.param("conv_b", (conv_ch,), ("mlp",), init="zeros"),
+        "a_log": pb.param("a_log", (h,), ("heads",), init="zeros"),
+        "dt_bias": pb.param("dt_bias", (h,), ("heads",), init="zeros"),
+        "D": pb.param("D", (h,), ("heads",), init="ones"),
+        "norm": pb.param("norm", (di,), ("mlp",), init="ones"),
+        "out_proj": pb.param("out_proj", (di, d), ("mlp", "embed")),
+    }
+
+
+def _split(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _conv(p, xbc, cfg: ModelConfig):
+    if cfg.use_pallas:
+        from repro.kernels.conv1d.ops import conv1d_causal
+        y = conv1d_causal(xbc, p["conv_w"].astype(xbc.dtype))
+    else:
+        from repro.kernels.conv1d.ref import conv1d_causal_ref
+        y = conv1d_causal_ref(xbc, p["conv_w"].astype(xbc.dtype))
+    return jax.nn.silu(y + p["conv_b"].astype(xbc.dtype))
+
+
+def ssd_chunked(x, dt, a_log, B, C, D, chunk: int):
+    """Chunked SSD scan.
+
+    x (b,t,h,p); dt (b,t,h) (post-softplus); a_log (h); B,C (b,t,n); D (h).
+    Returns (y (b,t,h,p), final_state (b,h,p,n)).
+
+    Padded tail positions carry dt = 0 (pad after softplus), so they neither
+    decay nor feed the state — the returned final_state is exact, which the
+    prefill -> decode handoff relies on.
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, t)
+    nc = -(-t // q)
+    pad = nc * q - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    la = -jnp.exp(a_log.astype(jnp.float32)) * dtc        # (b,nc,q,h) log-decay
+    cum = jnp.cumsum(la, axis=2)
+
+    # ---- intra-chunk (attention form) ----
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                    preferred_element_type=jnp.float32)   # (b,nc,q,q)
+    li = cum[:, :, :, None, :]                            # i index
+    lj = cum[:, :, None, :, :]                            # j index
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))        # (b,nc,q,q,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]   # weight by dt_j
+    att = jnp.where(mask[None, None, :, :, None], att, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    last = cum[:, :, -1:, :]                              # (b,nc,1,h)
+    w = jnp.exp(jnp.clip(last - cum, -60.0, None)) * dtc  # (b,nc,q,h)
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, Bc.astype(jnp.float32),
+                   xc.astype(jnp.float32))                # (b,nc,h,p,n)
+    A_chunk = jnp.exp(jnp.clip(last[:, :, 0, :], -60.0, 0.0))  # (b,nc,h)
+
+    def step(carry, inp):
+        s_new, a_c = inp                                  # (b,h,p,n), (b,h)
+        out = carry
+        carry = carry * a_c[:, :, None, None] + s_new
+        return carry, out
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, states_prev = jax.lax.scan(
+        step, s0, (S.transpose(1, 0, 2, 3, 4), A_chunk.transpose(1, 0, 2)))
+    states_prev = states_prev.transpose(1, 0, 2, 3, 4)    # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc.astype(jnp.float32),
+                         states_prev, jnp.exp(jnp.clip(cum, -60.0, 0.0)))
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :t]
+    y = y + D.astype(jnp.float32)[None, None, :, None] * \
+        x[:, :t].astype(jnp.float32)
+    return y, final
+
+
+def apply_mamba(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Training/prefill forward. x (B,T,D) -> (B,T,D) [, decode state]."""
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc_raw, dt = _split(cfg, proj)
+    xbc = _conv(p, xbc_raw, cfg)
+    xs = xbc[..., :di]
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:-1], h, hd)
+    y, final = ssd_chunked(xh, dt, p["a_log"], B, C, p["D"], cfg.ssm_chunk)
+    y = y.reshape(*xs.shape).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMS norm over d_inner
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    # conv rolling buffer = last (K-1) *raw* conv inputs, left-zero padded
+    kb = cfg.conv_width - 1
+    t = xbc_raw.shape[1]
+    buf = jnp.pad(xbc_raw, ((0, 0), (max(0, kb - t), 0), (0, 0)))[:, -kb:]
+    return out, {"ssm": final, "conv": buf}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+    return {
+        "ssm": jnp.zeros((batch, h, hd, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def apply_mamba_decode(p, x, state, cfg: ModelConfig):
+    """Single-token step. x (B,1,D); state dict -> (y (B,1,D), state)."""
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split(cfg, proj)
+    # conv over rolling buffer
+    buf = jnp.concatenate([state["conv"], xbc], axis=1)   # (B,K,ch)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", buf, w)[:, None, :]
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(x.dtype))
+    new_conv = buf[:, 1:]
+    xs = xbc[..., :di]
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,h)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)     # (B,h)
+    xh = xs.reshape(-1, h, hd).astype(jnp.float32)                 # (B,h,hd)
+    inc = dt[:, :, None, None] * xh[..., None] * \
+        B[:, 0].astype(jnp.float32)[:, None, None, :]              # (B,h,hd,n)
+    s = state["ssm"] * a[:, :, None, None] + inc
+    y = jnp.einsum("bhpn,bn->bhp", s, C[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype), {"ssm": s, "conv": new_conv}

@@ -1,0 +1,4 @@
+from repro.serving import cache
+from repro.serving.engine import decode_step, generate, prefill
+
+__all__ = ["cache", "decode_step", "generate", "prefill"]

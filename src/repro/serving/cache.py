@@ -1,0 +1,107 @@
+"""Decode-state (KV / SSM) caches for all six families.
+
+Caches are RING buffers of length ``ring``:
+  full attention  -> ring = cache_len (the cell's seq_len)
+  sliding window  -> ring = min(window, cache_len)  (bounds long_500k)
+  SSM             -> O(1) state, no ring at all
+Slot for position p is ``p % ring``; ``kv_pos`` (ring,) records which absolute
+position occupies each slot (-1 = empty) and drives the attention mask, so
+window/causal semantics survive wrap-around. Batched decoding is
+position-aligned (one scalar ``pos`` per cache), the standard batched-serving
+regime.
+
+All init_* functions are jnp-pure and run under jax.eval_shape for the
+dry-run (decode cells lower serve_step against these ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Cache = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def ring_len(cfg: ModelConfig, cache_len: int) -> int:
+    w = cfg.decode_window or cfg.sliding_window
+    return min(w, cache_len) if w else cache_len
+
+
+def _kv(cfg: ModelConfig, n: int, batch: int, ring: int):
+    shape = (n, batch, ring, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, _dt(cfg)), "v": jnp.zeros(shape, _dt(cfg))}
+
+
+def _ssm_states(cfg: ModelConfig, n: int, batch: int):
+    h, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ch = cfg.d_inner + 2 * ns
+    return {
+        "ssm": jnp.zeros((n, batch, h, hd, ns), jnp.float32),
+        "conv": jnp.zeros((n, batch, cfg.conv_width - 1, ch), _dt(cfg)),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Cache:
+    ring = ring_len(cfg, cache_len)
+    base = {"pos": jnp.zeros((), jnp.int32),
+            "kv_pos": jnp.full((ring,), -1, jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {**base, **_kv(cfg, cfg.n_layers, batch, ring)}
+    if fam == "ssm":
+        return {"pos": base["pos"], **_ssm_states(cfg, cfg.n_layers, batch)}
+    if fam == "hybrid":
+        ng = cfg.n_layers // cfg.attn_every
+        return {**base,
+                **_ssm_states(cfg, cfg.n_layers, batch),
+                "shared": _kv(cfg, ng, batch, ring)}
+    if fam == "vlm":
+        ng = cfg.n_layers // cfg.cross_attn_every
+        return {**base,
+                **_kv(cfg, cfg.n_layers, batch, ring),
+                "cross": _kv(cfg, ng, batch, cfg.n_img_tokens)}
+    if fam == "encdec":
+        return {**base,
+                **_kv(cfg, cfg.n_layers, batch, ring),
+                "cross": _kv(cfg, cfg.n_layers, batch, cfg.n_frames)}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# prefill -> cache construction
+# ---------------------------------------------------------------------------
+
+def ring_pack(k_full: jnp.ndarray, ring: int) -> jnp.ndarray:
+    """(N, B, S, ...) full-sequence K/V -> (N, B, ring, ...) ring buffer.
+
+    Keeps the last ``ring`` positions, each at slot p % ring.
+    """
+    s = k_full.shape[2]
+    if s <= ring:
+        pad = [(0, 0)] * k_full.ndim
+        pad[2] = (0, ring - s)
+        return jnp.pad(k_full, pad)
+    last = k_full[:, :, s - ring:]
+    return jnp.roll(last, (s - ring) % ring, axis=2)
+
+
+def ring_positions(s: int, ring: int) -> jnp.ndarray:
+    """kv_pos (ring,) after prefilling positions [0, s)."""
+    if s <= ring:
+        slots = jnp.arange(ring, dtype=jnp.int32)
+        return jnp.where(slots < s, slots, -1)
+    pos = jnp.arange(s - ring, s, dtype=jnp.int32)
+    return jnp.roll(pos, (s - ring) % ring)
+
+
+def write_token(kc: jnp.ndarray, k_new: jnp.ndarray, slot) -> jnp.ndarray:
+    """Insert one token's K/V at ``slot``. kc (B, ring, ...); k_new (B, 1, ...)."""
+    return jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype),
+                                               slot, axis=1)

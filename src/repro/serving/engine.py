@@ -1,0 +1,280 @@
+"""Serving: prefill + single-token decode steps for all families.
+
+``decode_step`` is THE graph lowered for the ``decode_32k`` / ``long_500k``
+dry-run cells: one new token against a ring KV cache (or O(1) SSM state).
+Layer loops are ``lax.scan`` over stacked params+caches, so the compiled
+artifact is depth-independent.
+
+Batched decoding is position-aligned (scalar ``pos``); a batched serving
+driver (serving/driver.py) schedules requests into these aligned batches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import model as M
+from repro.serving import cache as C
+
+
+# ---------------------------------------------------------------------------
+# shared decode sub-blocks
+# ---------------------------------------------------------------------------
+
+def _embed_one(p, cfg, token, pos):
+    x = jnp.take(p["embed"], token, axis=0).astype(M._dt(cfg))   # (B,1,D)
+    if cfg.pos_emb == "learned":
+        pe = jax.lax.dynamic_slice_in_dim(p["pos"], jnp.minimum(
+            pos, cfg.max_seq - 1), 1, axis=0)
+        x = x + pe[None].astype(x.dtype)
+    return x
+
+
+def _attn_decode(pl, x, cfg, kc, vc, pos, kv_pos, slot, *, rope=True):
+    """One-token self-attention against a ring cache. Returns (y, kc, vc)."""
+    b = x.shape[0]
+    h = L.apply_norm(pl["attn_norm"], x, cfg)
+    qp = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    q, k, v = L._qkv(pl["attn"], h, h, cfg, qp, qp, rope)
+    kc = C.write_token(kc, k, slot)
+    vc = C.write_token(vc, v, slot)
+    kvp = jnp.broadcast_to(kv_pos[None], (b, kv_pos.shape[0]))
+    o = L.decode_attention(q, kc, vc, qp, kvp, window=cfg.sliding_window)
+    y = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(o.dtype))
+    return x + y, kc, vc
+
+
+def _ffn_decode(pl, x, cfg):
+    h = L.apply_norm(pl["mlp_norm"], x, cfg)
+    if "moe" in pl:
+        y, _ = L.apply_moe(pl["moe"], h, cfg)
+    else:
+        y = L.apply_mlp(pl["mlp"], h, cfg)
+    return x + y
+
+
+def _cross_decode(pl, x, cfg, kc, vc, mem_pos):
+    """One-token cross-attention over a static memory cache."""
+    b = x.shape[0]
+    h = L.apply_norm(pl["attn_norm"], x, cfg)
+    qp = jnp.zeros((b, 1), jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", h, pl["attn"]["wq"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = L.rms_head_norm(pl["attn"]["q_norm"], q, cfg.norm_eps)
+    kvp = jnp.broadcast_to(mem_pos[None], (b, mem_pos.shape[0]))
+    o = L.decode_attention(q, kc, vc, qp, kvp, window=None, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(o.dtype))
+    if "gate" in pl["attn"]:
+        y = jnp.tanh(pl["attn"]["gate"].astype(y.dtype)) * y
+    x = x + y
+    if "mlp" in pl:
+        h = L.apply_norm(pl["mlp_norm"], x, cfg)
+        x = x + L.apply_mlp(pl["mlp"], h, cfg)
+    return x
+
+
+def _mamba_decode(pl, x, st, cfg):
+    h = L.apply_norm(pl["norm"], x, cfg)
+    y, st = S.apply_mamba_decode(pl["mamba"], h, st, cfg)
+    return x + y, st
+
+
+# ---------------------------------------------------------------------------
+# decode step (per family, unified entry)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any],
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token (B, 1) int32 -> (logits (B, 1, V) fp32, new cache)."""
+    pos = cache["pos"]
+    x = _embed_one(params, cfg, token, pos)
+    x = constrain(x, ("batch", None, "embed"))
+    fam = cfg.family
+    new = dict(cache)
+
+    has_ring = "kv_pos" in cache
+    if has_ring:
+        ring = cache["kv_pos"].shape[0]
+        slot = jax.lax.rem(pos, ring)
+        kv_pos = jax.lax.dynamic_update_slice(
+            cache["kv_pos"], pos[None], (slot,))
+        new["kv_pos"] = kv_pos
+
+    if fam in ("dense", "moe"):
+        def body(x, layer):
+            pl, kc, vc = layer
+            x, kc, vc = _attn_decode(pl, x, cfg, kc, vc, pos, kv_pos, slot)
+            x = _ffn_decode(pl, x, cfg)
+            return constrain(x, ("batch", None, "embed")), (kc, vc)
+        x, (k2, v2) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new["k"], new["v"] = k2, v2
+
+    elif fam == "ssm":
+        def body(x, layer):
+            pl, st = layer
+            x, st = _mamba_decode(pl, x, st, cfg)
+            return x, st
+        x, st2 = jax.lax.scan(
+            body, x, (params["layers"],
+                      {"ssm": cache["ssm"], "conv": cache["conv"]}))
+        new["ssm"], new["conv"] = st2["ssm"], st2["conv"]
+
+    elif fam == "hybrid":
+        ng = cfg.n_layers // cfg.attn_every
+        st_in = {"ssm": cache["ssm"].reshape((ng, cfg.attn_every) +
+                                             cache["ssm"].shape[1:]),
+                 "conv": cache["conv"].reshape((ng, cfg.attn_every) +
+                                               cache["conv"].shape[1:])}
+        shared = params["shared"]
+
+        def group(x, layer):
+            gp, st, kc, vc = layer
+
+            def inner(x, li):
+                pl, sti = li
+                return _mamba_decode(pl, x, sti, cfg)
+            x, st2 = jax.lax.scan(inner, x, (gp, st))
+            x, kc, vc = _attn_decode(shared, x, cfg, kc, vc, pos, kv_pos,
+                                     slot)
+            x = _ffn_decode(shared, x, cfg)
+            return x, (st2, kc, vc)
+        x, (st2, k2, v2) = jax.lax.scan(
+            group, x, (params["groups"], st_in,
+                       cache["shared"]["k"], cache["shared"]["v"]))
+        new["ssm"] = st2["ssm"].reshape((-1,) + st2["ssm"].shape[2:])
+        new["conv"] = st2["conv"].reshape((-1,) + st2["conv"].shape[2:])
+        new["shared"] = {"k": k2, "v": v2}
+
+    elif fam == "vlm":
+        ng = cfg.n_layers // cfg.cross_attn_every
+        mem_pos = jnp.arange(cfg.n_img_tokens, dtype=jnp.int32)
+        kr = cache["k"].reshape((ng, cfg.cross_attn_every) +
+                                cache["k"].shape[1:])
+        vr = cache["v"].reshape((ng, cfg.cross_attn_every) +
+                                cache["v"].shape[1:])
+
+        def group(x, layer):
+            cp, sp, ck, cv, kc, vc = layer
+            x = _cross_decode(cp, x, cfg, ck, cv, mem_pos)
+
+            def inner(x, li):
+                pl, kci, vci = li
+                x, kci, vci = _attn_decode(pl, x, cfg, kci, vci, pos,
+                                           kv_pos, slot)
+                x = _ffn_decode(pl, x, cfg)
+                return x, (kci, vci)
+            x, (kc, vc) = jax.lax.scan(inner, x, (sp, kc, vc))
+            return x, (kc, vc)
+        x, (k2, v2) = jax.lax.scan(
+            group, x, (params["cross"], params["groups"],
+                       cache["cross"]["k"], cache["cross"]["v"], kr, vr))
+        new["k"] = k2.reshape((-1,) + k2.shape[2:])
+        new["v"] = v2.reshape((-1,) + v2.shape[2:])
+
+    elif fam == "encdec":
+        mem_pos = jnp.arange(cfg.n_frames, dtype=jnp.int32)
+
+        def body(x, layer):
+            pl, kc, vc, ck, cv = layer
+            x, kc, vc = _attn_decode(pl, x, cfg, kc, vc, pos, kv_pos, slot,
+                                     rope=False)
+            h = L.apply_norm(pl["cross_norm"], x, cfg)
+            qp = jnp.zeros((x.shape[0], 1), jnp.int32)
+            q = jnp.einsum("bsd,dhk->bshk", h,
+                           pl["cross"]["wq"].astype(h.dtype))
+            kvp = jnp.broadcast_to(mem_pos[None], (x.shape[0],
+                                                   cfg.n_frames))
+            o = L.decode_attention(q, ck, cv, qp, kvp, window=None,
+                                   causal=False)
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               pl["cross"]["wo"].astype(o.dtype))
+            x = _ffn_decode(pl, x, cfg)
+            return x, (kc, vc)
+        x, (k2, v2) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["cross"]["k"], cache["cross"]["v"]))
+        new["k"], new["v"] = k2, v2
+    else:
+        raise ValueError(fam)
+
+    logits = M.unembed(params, cfg, x)
+    new["pos"] = pos + 1
+    return logits, new
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _cross_kv(attn_p, mem, cfg):
+    """Precompute cross-attention K/V over a memory. attn_p leaves may carry a
+    leading stack axis (G or L)."""
+    def one(pl):
+        k = jnp.einsum("btd,dhk->bthk", mem, pl["wk"].astype(mem.dtype))
+        v = jnp.einsum("btd,dhk->bthk", mem, pl["wv"].astype(mem.dtype))
+        if cfg.qk_norm:
+            k = L.rms_head_norm(pl["k_norm"], k, cfg.norm_eps)
+        return {"k": k, "v": v}
+    return jax.vmap(one)(attn_p)
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, cache_len: int,
+            memory: Optional[jnp.ndarray] = None):
+    """tokens (B, S) -> (logits (B, S, V), cache ready for decode at pos=S)."""
+    b, s = tokens.shape
+    logits, _, kv = M.forward(params, cfg, tokens, memory=memory,
+                              collect_kv=True)
+    ring = C.ring_len(cfg, cache_len)
+    cc = C.init_cache(cfg, b, cache_len)
+    cc["pos"] = jnp.asarray(s, jnp.int32)
+    if "kv_pos" in cc:
+        cc["kv_pos"] = C.ring_positions(s, ring)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        k, v = kv["self"]
+        cc["k"] = C.ring_pack(k.astype(cc["k"].dtype), ring)
+        cc["v"] = C.ring_pack(v.astype(cc["v"].dtype), ring)
+    if fam in ("ssm", "hybrid"):
+        cc["ssm"] = kv["states"]["ssm"]
+        cc["conv"] = kv["states"]["conv"].astype(cc["conv"].dtype)
+    if fam == "hybrid":
+        k, v = kv["shared"]
+        cc["shared"] = {"k": C.ring_pack(k.astype(M._dt(cfg)), ring),
+                        "v": C.ring_pack(v.astype(M._dt(cfg)), ring)}
+    if fam == "vlm":
+        mem = memory.astype(M._dt(cfg))
+        cc["cross"] = _cross_kv(params["cross"]["attn"], mem, cfg)
+    if fam == "encdec":
+        mem = kv["memory"]
+        cc["cross"] = _cross_kv(params["dec_layers"]["cross"], mem, cfg)
+    return logits, cc
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, n_new: int,
+             cache_len: int, memory: Optional[jnp.ndarray] = None,
+             greedy: bool = True, key: Optional[jax.Array] = None):
+    """Autoregressive generation: prefill + n_new greedy/sampled steps."""
+    logits, cc = prefill(params, cfg, prompt, cache_len, memory=memory)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    def step(carry, _):
+        tok, cc, k = carry
+        lg, cc = decode_step(params, cfg, cc, tok)
+        if greedy:
+            nxt = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+        else:
+            k, sub = jax.random.split(k)
+            nxt = jax.random.categorical(sub, lg[:, -1])[:, None]
+        return (nxt, cc, k), nxt[:, 0]
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    (_, cc, _), toks = jax.lax.scan(step, (tok, cc, key), None, length=n_new)
+    return jnp.concatenate([tok, toks.T[:, :-1]], axis=1), cc

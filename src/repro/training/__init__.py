@@ -1,0 +1,7 @@
+from repro.training import checkpoint, data, fault_tolerance, optimizer
+from repro.training.train_step import (TrainConfig, TrainState, init_state,
+                                       make_train_step, train_step)
+
+__all__ = ["checkpoint", "data", "fault_tolerance", "optimizer",
+           "TrainConfig", "TrainState", "init_state", "make_train_step",
+           "train_step"]

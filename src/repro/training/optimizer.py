@@ -1,0 +1,94 @@
+"""AdamW with fp32 master state, global-norm clipping, cosine schedule.
+
+No optax dependency — the optimizer is a pure pytree transform so its state
+inherits the params' logical-axis sharding (ZeRO: moments are sharded
+exactly like the FSDP weight shards; under pjit this happens automatically
+because the state tree carries the same NamedShardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray        # () int32
+    mu: Any                  # fp32 first moment, params-shaped
+    nu: Any                  # fp32 second moment
+    master: Any              # fp32 master weights
+
+
+def schedule(oc: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * cos
+
+
+def init(params) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        # copy=True: fp32 params must NOT alias master (donation safety)
+        master=jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply(oc: OptConfig, state: OptState, grads, compute_dtype) -> Tuple[Any, OptState, Dict]:
+    """One AdamW step. grads are fp32 (cast by the caller); returns new
+    compute-dtype params + new state + metrics."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(oc, step)
+    b1, b2 = oc.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        m = m - lr * (mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * m)
+        return mu, nu, m
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    flat_m = treedef.flatten_up_to(state.master)
+    out = [upd(g, mu, nu, m) for g, mu, nu, m in
+           zip(flat_g, flat_mu, flat_nu, flat_m)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    params = jax.tree.map(lambda m: m.astype(compute_dtype), master)
+    new_state = OptState(step=step, mu=mu, nu=nu, master=master)
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,13 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and kernel tests
+must see the single real CPU device (the 512-device placeholder mesh belongs
+exclusively to launch/dryrun.py, which sets the flag before importing jax).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,65 @@
+"""Analytic cost model tests — must reproduce paper Table 1 (Box-2D3R, c=8,
+TCStencil L=16) and the §2.3 asymptotic redundancy bounds."""
+import numpy as np
+import pytest
+
+from repro.core import analysis
+
+
+def test_table1_matches_paper():
+    t = analysis.table1(r=3, c=8)
+    lb = t["lower_bound"]
+    assert lb.macs == 49
+    np.testing.assert_allclose(lb.input_access, (8 + 6) ** 2 / 64)  # 3.0625
+    np.testing.assert_allclose(lb.param_access, 49 / 64)            # 0.7656
+    np.testing.assert_allclose(t["tcstencil"].macs, 286.72)
+    np.testing.assert_allclose(t["tcstencil"].input_access, 17.92)
+    np.testing.assert_allclose(t["convstencil"].macs, 104)
+    np.testing.assert_allclose(t["convstencil"].input_access, 13)
+    np.testing.assert_allclose(t["convstencil"].param_access, 13)
+    np.testing.assert_allclose(t["lorastencil"].macs, 144)
+    np.testing.assert_allclose(t["lorastencil"].input_access, 4)
+    np.testing.assert_allclose(t["lorastencil"].param_access, 12)
+    np.testing.assert_allclose(t["sptcstencil"].macs, 56)
+    np.testing.assert_allclose(t["sptcstencil"].input_access, 14)
+    np.testing.assert_allclose(t["sptcstencil"].param_access, 7)
+
+
+def test_sptc_beats_dense_tc_baselines():
+    """Paper's headline: SPTCStencil cuts MACs >= ~2x vs dense TC methods."""
+    for r in (1, 2, 3):
+        s = analysis.sptcstencil(r)
+        assert analysis.tcstencil(r).macs / s.macs > 2.0
+        assert analysis.convstencil(r).macs >= s.macs
+        assert s.param_access <= analysis.convstencil(r).param_access
+
+
+def test_redundancy_lower_bounds_of_baselines():
+    """§2.3: ConvStencil > 2x LB; TCStencil >= 4.5x LB at r=3."""
+    lb = analysis.lower_bound(3).macs
+    assert analysis.convstencil(3).macs > 2 * lb
+    assert analysis.tcstencil(3).macs >= 4.5 * lb
+    assert analysis.lorastencil(3).macs >= 1.29 * lb
+
+
+def test_tpu_im2col_hits_mac_lower_bound():
+    """Our beyond-paper TPU kernel: exactly the (2r+1)^2 MAC lower bound."""
+    for r in (1, 2, 3):
+        assert analysis.tpu_im2col(r).macs == analysis.lower_bound(r).macs
+
+
+def test_mxu_k_occupancy():
+    # K = (2r+1)^2: 9/128, 25/128, 49/128
+    np.testing.assert_allclose(analysis.mxu_k_occupancy(1), 9 / 128)
+    np.testing.assert_allclose(analysis.mxu_k_occupancy(3), 49 / 128)
+
+
+def test_sptc_halves_the_dense_padded_gemm():
+    """The compressed SpMM executes K/2: exactly half the padded dense GEMM's
+    reduction work — the 2x SpTC skip the paper exploits."""
+    r, c = 3, 8
+    dense_k = 4 * -(-(2 * r + c) // 4)
+    s = analysis.sptcstencil(r, c)
+    rows = 2 * r + 1
+    dense_macs = rows * 8 * 8 * dense_k / c ** 2
+    np.testing.assert_allclose(s.macs, dense_macs / 2)

@@ -1,0 +1,165 @@
+"""Strided-swap 2:4 sparsification + encoding (paper §3.2.2) tests.
+
+The heart of the paper: the column permutation must turn the banded kernel
+matrix into a valid 2:4 pattern for EVERY radius, and the compressed
+(values, metadata) encoding must round-trip exactly.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsify import (Sparse24, apply_col_perm, decode_24,
+                                 encode_24, is_24_sparse,
+                                 sparsify_stencil_kernel, strided_swap_perm)
+from repro.core.transform import default_l, kernel_matrix
+
+
+# ---------------------------------------------------------------------------
+# the strided swap permutation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L", [4, 6, 8, 10, 16, 32])
+def test_perm_is_involution(L):
+    perm = strided_swap_perm(L)
+    np.testing.assert_array_equal(perm[perm], np.arange(2 * L))
+
+
+@pytest.mark.parametrize("L", [4, 8, 16])
+def test_perm_swaps_odd_fixes_even(L):
+    perm = strided_swap_perm(L)
+    for p in range(L):
+        if p % 2 == 1:
+            assert perm[p] == p + L and perm[p + L] == p
+        else:
+            assert perm[p] == p
+    # upper-half odd positions (p >= L, p odd offset) hold lower-half odds
+    for p in range(L, 2 * L):
+        if (p - L) % 2 == 1:
+            assert perm[p] == p - L
+
+
+@pytest.mark.parametrize("r", list(range(1, 12)))
+def test_strided_swap_yields_24_for_all_radii(r):
+    """Paper §3.2.2 step 2 — the structural guarantee, swept over radius."""
+    w = np.random.default_rng(r).normal(size=2 * r + 1)
+    w[w == 0] = 1.0
+    L = default_l(r)
+    K = kernel_matrix(w, L=L, pad_width=True)
+    assert not is_24_sparse(K) or r == 0   # band is clustered pre-swap
+    Kp = apply_col_perm(K, strided_swap_perm(L))
+    assert is_24_sparse(Kp)
+    # exactly 2r+1 non-zeros per row survive the permutation
+    assert np.all((Kp != 0).sum(axis=1) == 2 * r + 1)
+
+
+@given(r=st.integers(1, 8), seed=st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_swap_preserves_multiset_and_equivalence(r, seed):
+    """Permutation correctness: K' @ x' == K @ x when x is row-permuted by
+    the same involution (paper §3.3 zero-cost row swap)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=2 * r + 1)
+    L = default_l(r)
+    K = kernel_matrix(w, L=L, pad_width=True)
+    perm = strided_swap_perm(L)
+    Kp = apply_col_perm(K, perm)
+    x = rng.normal(size=(2 * L, 7))
+    np.testing.assert_allclose(Kp @ x[perm], K @ x, rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 2:4 encoding (paper §3.2.2 step 3, Figure 5)
+# ---------------------------------------------------------------------------
+
+def _random_24(rng, m, k, density=0.5):
+    """Random matrix that satisfies 2:4 by construction."""
+    out = np.zeros((m, k))
+    for i in range(m):
+        for s in range(k // 4):
+            nnz = rng.integers(0, 3)            # 0, 1 or 2 per segment
+            pos = rng.choice(4, size=nnz, replace=False)
+            out[i, 4 * s + pos] = rng.normal(size=nnz)
+    return out
+
+
+@given(m=st.integers(1, 8), segs=st.integers(1, 8), seed=st.integers(0, 999))
+@settings(max_examples=60, deadline=None)
+def test_encode_decode_roundtrip(m, segs, seed):
+    rng = np.random.default_rng(seed)
+    mat = _random_24(rng, m, 4 * segs)
+    sp = encode_24(mat)
+    np.testing.assert_array_equal(decode_24(sp), mat)
+    # metadata strictly increasing within each segment pair
+    meta = sp.meta.reshape(m, segs, 2)
+    assert np.all(meta[..., 0] < meta[..., 1])
+
+
+def test_encode_rejects_non_24():
+    bad = np.zeros((1, 4))
+    bad[0, :3] = 1.0                            # 3 non-zeros in a segment
+    with pytest.raises(ValueError):
+        encode_24(bad)
+    with pytest.raises(ValueError):
+        encode_24(np.ones((2, 6)))              # width not multiple of 4
+
+
+def test_encode_placeholder_rules():
+    """Figure 5's zero-placeholder rule: segments with <2 nnz keep consistent
+    dims and strictly-increasing metadata."""
+    mat = np.zeros((3, 4))
+    mat[0, 1] = 5.0                             # one nnz at p=1
+    mat[1, 3] = 7.0                             # one nnz at p=3
+    sp = encode_24(mat)                         # row 2 empty
+    np.testing.assert_array_equal(sp.meta[0], [1, 3])
+    np.testing.assert_array_equal(sp.values[0], [5.0, 0.0])
+    np.testing.assert_array_equal(sp.meta[1], [2, 3])
+    np.testing.assert_array_equal(sp.values[1], [0.0, 7.0])
+    np.testing.assert_array_equal(sp.meta[2], [2, 3])
+    np.testing.assert_array_equal(sp.values[2], [0.0, 0.0])
+    np.testing.assert_array_equal(decode_24(sp), mat)
+
+
+def test_meta_bits_lsb_first():
+    """Hardware packing: 2-bit fields, LSB-first (paper Fig. 5)."""
+    mat = np.zeros((1, 8))
+    mat[0, [0, 2]] = [1.0, 2.0]                 # seg 0 -> indices (0, 2)
+    mat[0, [5, 7]] = [3.0, 4.0]                 # seg 1 -> indices (1, 3)
+    sp = encode_24(mat)
+    words = sp.meta_bits()
+    assert words.shape == (1, 1)
+    # fields in order: 0,2,1,3 -> bits 00 | 10<<2 | 01<<4 | 11<<6
+    assert words[0, 0] == (0 | (2 << 2) | (1 << 4) | (3 << 6))
+
+
+def test_gather_indices():
+    mat = np.zeros((1, 8))
+    mat[0, [1, 2, 4, 6]] = [1, 2, 3, 4]
+    sp = encode_24(mat)
+    np.testing.assert_array_equal(sp.gather_indices()[0], [1, 2, 4, 6])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end sparsified stencil kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r", [1, 2, 3, 5, 7])
+def test_sparsify_stencil_kernel(r):
+    w = np.random.default_rng(r).normal(size=2 * r + 1)
+    sk = sparsify_stencil_kernel(w)
+    L = default_l(r)
+    assert sk.L == L and sk.window == 2 * L
+    assert sk.values.shape == (L, L)            # K/2 = 2L/2 = L
+    # decompressed(perm applied) equals the original banded matrix
+    K = kernel_matrix(w, L=L, pad_width=True)
+    dense_perm = decode_24(sk.sparse)
+    np.testing.assert_allclose(
+        apply_col_perm(dense_perm, np.argsort(sk.perm)), K, rtol=1e-12)
+
+
+def test_sparsity_ratio_maximizes_sptc_utilization():
+    """Paper §3.2.2 step 1: L = 2r+2 gives density 50% exactly at the padded
+    2:4 budget — every compressed slot except one per row is useful."""
+    for r in range(1, 8):
+        sk = sparsify_stencil_kernel(np.ones(2 * r + 1))
+        useful = (sk.values != 0).sum(axis=1)
+        assert np.all(useful == 2 * r + 1)      # of L = 2r+2 slots

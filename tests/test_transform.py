@@ -1,0 +1,100 @@
+"""Stencil -> kernel-matrix transform (paper §3.2.1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stencil import make_stencil, star_mask, StencilSpec
+from repro.core.transform import (axis_decompose_star, band_density,
+                                  decompose_rows, default_l, kernel_matrix)
+
+
+def test_default_l_is_even_and_min():
+    for r in range(1, 8):
+        L = default_l(r)
+        assert L == 2 * r + 2
+        assert L % 2 == 0
+        # paper §3.2.2 step 1: (2r+1)/(2r+L) = 50% - eps, i.e. L >= 2r+1
+        assert band_density(r, L) <= 0.5
+
+
+@pytest.mark.parametrize("r", [1, 2, 3, 5, 7])
+def test_kernel_matrix_band_structure(r):
+    w = np.arange(1, 2 * r + 2, dtype=np.float64)
+    L = default_l(r)
+    K = kernel_matrix(w, L=L, pad_width=False)
+    assert K.shape == (L, 2 * r + L)
+    for i in range(L):
+        np.testing.assert_array_equal(K[i, i:i + 2 * r + 1], w)
+        assert np.all(K[i, :i] == 0)
+        assert np.all(K[i, i + 2 * r + 1:] == 0)
+
+
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_kernel_matrix_padded_width(r):
+    w = np.ones(2 * r + 1)
+    L = default_l(r)
+    K = kernel_matrix(w, L=L, pad_width=True)
+    assert K.shape == (L, 2 * L)
+    # columns beyond 2r+L are structurally zero
+    assert np.all(K[:, 2 * r + L:] == 0)
+
+
+def test_kernel_matrix_rejects_bad_l():
+    w = np.ones(5)  # r = 2
+    with pytest.raises(ValueError):
+        kernel_matrix(w, L=5)       # odd
+    with pytest.raises(ValueError):
+        kernel_matrix(w, L=4)       # < 2r+2
+    with pytest.raises(ValueError):
+        kernel_matrix(np.ones(4))   # even tap count
+
+
+@given(r=st.integers(1, 6), c=st.integers(0, 200))
+@settings(max_examples=40, deadline=None)
+def test_kernel_matrix_matmul_is_stencil(r, c):
+    """Y = K @ X computes L consecutive 1-D stencil outputs (paper Fig. 3)."""
+    rng = np.random.default_rng(c)
+    w = rng.normal(size=2 * r + 1)
+    L = default_l(r)
+    K = kernel_matrix(w, L=L, pad_width=False)
+    x = rng.normal(size=(2 * r + L,))
+    y = K @ x
+    expect = np.array([np.dot(w, x[i:i + 2 * r + 1]) for i in range(L)])
+    np.testing.assert_allclose(y, expect, rtol=1e-12)
+
+
+@pytest.mark.parametrize("shape,ndim,r", [("box", 2, 1), ("box", 2, 3),
+                                          ("star", 2, 2), ("box", 3, 1),
+                                          ("star", 3, 2)])
+def test_decompose_rows_reassembles(shape, ndim, r):
+    spec = make_stencil(shape, ndim, r, seed=3)
+    rows = decompose_rows(spec)
+    rebuilt = np.zeros_like(spec.weights)
+    for lead, wrow in rows:
+        rebuilt[lead] = wrow
+    np.testing.assert_array_equal(rebuilt, spec.weights)
+    if shape == "star":
+        # star: only the axis rows survive -> 2r off-center rows + 1 center
+        assert len(rows) == (2 * r + 1 if ndim == 2 else 4 * r + 1)
+
+
+@pytest.mark.parametrize("ndim,r", [(2, 1), (2, 3), (3, 2)])
+def test_axis_decompose_star_counts_center_once(ndim, r):
+    spec = make_stencil("star", ndim, r, seed=5)
+    kernels = axis_decompose_star(spec)
+    assert len(kernels) == ndim
+    total = sum(k.sum() for k in kernels)
+    np.testing.assert_allclose(total, spec.weights.sum(), rtol=1e-12)
+    # center tap kept only in last-axis kernel
+    for axis in range(ndim - 1):
+        assert kernels[axis][r] == 0.0
+
+
+def test_star_mask_and_spec_validation():
+    m = star_mask(2, 2)
+    assert m.sum() == 2 * 2 * 2 + 1
+    w = np.ones((5, 5))
+    with pytest.raises(ValueError):
+        StencilSpec(shape="star", ndim=2, radius=2, weights=w)  # box weights
+    with pytest.raises(ValueError):
+        StencilSpec(shape="box", ndim=4, radius=1, weights=np.ones((3,) * 4))
