@@ -27,6 +27,30 @@ def bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
+def tuned_stencil_bench():
+    """End-to-end: default direct engine vs the tuner's measured plan."""
+    from repro.core.stencil import make_stencil
+    from repro.tuner import PlanCache, plan_for
+    from repro.tuner.plan import Plan
+    from repro.tuner.search import measure
+
+    print()
+    print("# end-to-end stencil: default direct engine vs repro.tuner plan")
+    print("stencil,plan,default_us,tuned_us,speedup")
+    cache = PlanCache()
+    rng = np.random.default_rng(1)
+    n = 256
+    for shape, ndim, r in (("star", 2, 1), ("box", 2, 2), ("box", 2, 3)):
+        spec = make_stencil(shape, ndim, r, seed=9)
+        x = jnp.asarray(rng.normal(size=(n + 2 * r, n + 2 * r)), jnp.float32)
+        plan = plan_for(spec, x.shape, x.dtype, cache=cache, iters=5)
+        td = measure(cache.engine(spec, Plan.default(spec)), x, iters=10)
+        tt = measure(cache.engine(spec, plan), x, iters=10)
+        print(f"{spec.name},{plan.describe()},{td*1e6:.1f},{tt*1e6:.1f},"
+              f"{td/tt:.2f}x")
+    print(f"# tuner cache: {cache.stats.as_dict()}")
+
+
 def main():
     print("# kernel microbench: dense padded GEMM vs compressed 2:4 SpMM")
     print("radius,L,n,dense_us,sptc_us,dense_gmacs,sptc_gmacs")
@@ -51,6 +75,7 @@ def main():
         print(f"{r},{L},{n},{td*1e6:.1f},{ts*1e6:.1f},"
               f"{dmacs/td/1e9:.2f},{smacs/ts/1e9:.2f}")
     print("# sptc executes K/2 — per-useful-MAC throughput is the metric")
+    tuned_stencil_bench()
 
 
 if __name__ == "__main__":

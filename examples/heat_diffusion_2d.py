@@ -3,8 +3,8 @@
 
 Solves u_t = alpha * laplacian(u) with an explicit Star-2D1R update on a
 512x512 grid for 400 time steps, comparing the sparse-tensor-core execution
-path against the direct oracle, and reporting GStencils/s (the paper's
-metric).
+path and the autotuned plan (repro.tuner) against the direct oracle, and
+reporting GStencils/s (the paper's metric).
 
     PYTHONPATH=src python examples/heat_diffusion_2d.py
 """
@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.engine import StencilEngine
 from repro.core.stencil import StencilSpec
+from repro.tuner import cache_stats, tuned_engine
 
 N, STEPS, ALPHA = 512, 400, 0.2
 
@@ -30,8 +31,15 @@ u0 = np.zeros((N, N), np.float32)
 u0[N // 4:N // 2, N // 4:N // 2] = 100.0
 u0 = jnp.asarray(np.pad(u0, 1))
 
-for backend in ("direct", "sptc"):
-    eng = StencilEngine(spec, backend=backend)
+for backend in ("direct", "sptc", "tuned"):
+    if backend == "tuned":
+        # measured plan selection, cached across calls (and across processes
+        # when REPRO_TUNER_CACHE is set)
+        eng = tuned_engine(spec, u0.shape, u0.dtype)
+        print(f"tuner picked backend={eng.backend} L={eng.L} "
+              f"(stats: {cache_stats()})")
+    else:
+        eng = StencilEngine(spec, backend=backend)
     u = eng.iterate(u0, steps=1)            # warm up compile
     jax.block_until_ready(u)
     t0 = time.perf_counter()
@@ -46,8 +54,8 @@ for backend in ("direct", "sptc"):
         ref = u
     else:
         err = float(jnp.max(jnp.abs(u - ref)))
-        print(f"{'':8s}  max|sptc - direct| after {STEPS} steps = {err:.2e}")
-        assert err < 1e-2, "sparse path diverged from oracle"
+        print(f"{'':8s}  max|{backend} - direct| after {STEPS} steps = {err:.2e}")
+        assert err < 1e-2, f"{backend} path diverged from oracle"
 
 # heat is conserved up to the insulated-boundary loss
 print("heat diffusion OK")

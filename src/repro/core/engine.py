@@ -16,7 +16,6 @@ d-D stencils decompose by kernel rows into 1-D stencils along the last axis
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -258,13 +257,15 @@ class StencilEngine:
         return out
 
 
-@functools.lru_cache(maxsize=None)
-def _cached_engine(spec_key, backend, L):
-    spec, = spec_key
-    return StencilEngine(spec, backend=backend, L=L)
-
-
 def apply_stencil(spec: StencilSpec, x: jnp.ndarray, backend: str = "direct",
                   L: int | None = None) -> jnp.ndarray:
-    """One-shot functional entry point."""
-    return StencilEngine(spec, backend=backend, L=L)(x)
+    """One-shot functional entry point, engine-cached by stencil content.
+
+    Repeated calls with the same (spec, backend, L) reuse one compiled
+    StencilEngine from the process-wide ``repro.tuner`` cache instead of
+    re-building and re-jitting — SPIDER's zero-runtime-overhead contract.
+    For measured backend/L selection use :func:`repro.tuner.tuned_apply`.
+    """
+    from repro.tuner.cache import default_cache
+    from repro.tuner.plan import Plan
+    return default_cache().engine(spec, Plan.default(spec, backend, L))(x)

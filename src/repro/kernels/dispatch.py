@@ -1,13 +1,36 @@
-"""Engine backend -> Pallas kernel builders."""
+"""Engine backend -> Pallas kernel builders + backend applicability.
+
+``applicable_backends`` is the tuner's candidate universe: which of
+``engine.BACKENDS`` can execute a given spec on a given device kind.
+The jnp backends (direct/gemm/sptc) run anywhere XLA does; the Pallas
+backends only enter the candidate set on a real TPU (off-TPU they fall
+back to interpret mode — bit-faithful but Python-speed, never a winning
+plan) unless ``REPRO_TUNER_INCLUDE_PALLAS=1`` forces them in for
+correctness sweeps.
+"""
 from __future__ import annotations
 
-from typing import Callable
+import os
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.stencil import StencilSpec
+
+JNP_BACKENDS = ("direct", "gemm", "sptc")
+PALLAS_BACKENDS = ("pallas_direct", "pallas_mxu", "pallas_sptc")
+
+
+def applicable_backends(spec: StencilSpec,
+                        device: str | None = None) -> Tuple[str, ...]:
+    """Backends able to execute ``spec`` on ``device`` (default: current)."""
+    device = device if device is not None else jax.default_backend()
+    out = list(JNP_BACKENDS)
+    if device == "tpu" or os.environ.get("REPRO_TUNER_INCLUDE_PALLAS") == "1":
+        out.extend(PALLAS_BACKENDS)
+    return tuple(out)
 
 
 def build(spec: StencilSpec, backend: str, L: int) -> Callable:

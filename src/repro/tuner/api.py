@@ -1,0 +1,93 @@
+"""Public tuner entry points.
+
+    from repro.tuner import tuned_apply
+    y = tuned_apply(spec, x)          # tunes once, then cache-hits forever
+
+``mode`` selects how a missing plan is chosen: ``"time"`` (measure
+candidates; the default) or ``"cost"`` (static model, no builds).  The
+``REPRO_TUNER_MODE`` env var overrides the default for processes where
+timing is undesirable (CI, dry-runs).
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core.engine import StencilEngine
+from repro.core.stencil import StencilSpec
+from repro.tuner.cache import PlanCache, default_cache
+from repro.tuner.plan import Plan, plan_key
+from repro.tuner.search import autotune
+
+MODE_ENV_VAR = "REPRO_TUNER_MODE"
+
+
+def _resolve_mode(mode: str | None) -> str:
+    return mode or os.environ.get(MODE_ENV_VAR, "time")
+
+
+def plan_for(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
+             cache: PlanCache | None = None, mode: str | None = None,
+             warmup: int = 1, iters: int = 3) -> Plan:
+    """The cached plan for (spec, halo-inclusive shape, dtype); tunes on miss."""
+    cache = cache if cache is not None else default_cache()
+    key = plan_key(spec, tuple(shape), dtype)
+    plan = cache.lookup(key)
+    if plan is None:
+        before = cache.engine_plans(spec)
+        result = autotune(spec, tuple(shape), dtype, mode=_resolve_mode(mode),
+                          engine_factory=cache.engine,
+                          warmup=warmup, iters=iters)
+        cache.stats.tunes += 1
+        plan = result.plan
+        cache.store(key, plan)
+        # keep the (already warm) winner plus anything cached before the
+        # tune; losing candidates' compiled engines are dead weight
+        cache.prune_engines(spec, keep=before | {plan})
+    return plan
+
+
+def tuned_engine(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
+                 cache: PlanCache | None = None, mode: str | None = None,
+                 warmup: int = 1, iters: int = 3) -> StencilEngine:
+    """Compiled engine for the tuned plan (shared jit cache across calls)."""
+    cache = cache if cache is not None else default_cache()
+    plan = plan_for(spec, shape, dtype, cache=cache, mode=mode,
+                    warmup=warmup, iters=iters)
+    return cache.engine(spec, plan)
+
+
+def tuned_apply(spec: StencilSpec, x, *, cache: PlanCache | None = None,
+                mode: str | None = None, warmup: int = 1, iters: int = 3):
+    """Apply ``spec`` to ``x`` (halo included) through the tuned plan."""
+    eng = tuned_engine(spec, x.shape, x.dtype, cache=cache, mode=mode,
+                       warmup=warmup, iters=iters)
+    return eng(x)
+
+
+def tuned_apply_batched(spec: StencilSpec, xs, *,
+                        cache: PlanCache | None = None,
+                        mode: str | None = None,
+                        warmup: int = 1, iters: int = 3):
+    """Apply ``spec`` to a batch ``xs`` of shape (B, *spatial-with-halo).
+
+    The plan is tuned for one instance; execution is a single
+    jit(vmap(engine)) program — the many-user serving path.
+    """
+    cache = cache if cache is not None else default_cache()
+    plan = plan_for(spec, tuple(xs.shape[1:]), xs.dtype, cache=cache,
+                    mode=mode, warmup=warmup, iters=iters)
+    return cache.batched(spec, plan)(xs)
+
+
+def cache_stats(cache: PlanCache | None = None) -> dict:
+    cache = cache if cache is not None else default_cache()
+    return cache.stats.as_dict()
+
+
+def clear_cache(cache: PlanCache | None = None,
+                remove_file: bool = False) -> None:
+    cache = cache if cache is not None else default_cache()
+    cache.clear(remove_file=remove_file)

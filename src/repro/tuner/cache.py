@@ -1,0 +1,206 @@
+"""Plan + compiled-engine cache with JSON persistence.
+
+Three maps, three lifetimes:
+
+  plans     PlanKey -> Plan.  Cheap, serializable — persisted to a JSON
+            file so tuning survives process restarts (set the path, or
+            the ``REPRO_TUNER_CACHE`` env var for the default cache).
+  engines   (spec fingerprint, Plan) -> StencilEngine.  Holds the jitted
+            executable; this is what kills the re-jit-per-call pattern
+            the dead ``_cached_engine`` was meant to prevent.
+  batched   (spec fingerprint, Plan) -> jit(vmap(engine)).  The
+            many-user entry: one compiled program for a whole batch.
+
+Persistence format (version 1)::
+
+    {"version": 1, "plans": {"spec=...;shape=...;dtype=...;dev=...":
+                             {"backend": "sptc", "L": 8, ...}}}
+
+Writes are atomic (tmp file + rename) so a crashed process never leaves
+a truncated cache behind; unreadable files are ignored, not fatal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.engine import StencilEngine
+from repro.core.stencil import StencilSpec
+from repro.tuner.plan import Plan, PlanKey, spec_fingerprint
+
+CACHE_ENV_VAR = "REPRO_TUNER_CACHE"
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class CacheStats:
+    plan_hits: int = 0
+    plan_misses: int = 0
+    tunes: int = 0
+    engine_builds: int = 0
+    engine_hits: int = 0
+    loads: int = 0
+    saves: int = 0
+
+    @property
+    def plan_hit_rate(self) -> float:
+        total = self.plan_hits + self.plan_misses
+        return self.plan_hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["plan_hit_rate"] = round(self.plan_hit_rate, 4)
+        return d
+
+
+class PlanCache:
+    """In-memory plan + executable cache, optionally backed by a JSON file."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path: Optional[Path] = Path(path).expanduser() if path else None
+        self.stats = CacheStats()
+        self._plans: Dict[str, Plan] = {}
+        self._engines: Dict[Tuple[str, Plan], StencilEngine] = {}
+        self._batched: Dict[Tuple[str, Plan], Callable] = {}
+        if self.path is not None:
+            self.load(missing_ok=True)
+
+    # -- plans ---------------------------------------------------------------
+    def lookup(self, key: PlanKey) -> Optional[Plan]:
+        plan = self._plans.get(key.encode())
+        if plan is None:
+            self.stats.plan_misses += 1
+        else:
+            self.stats.plan_hits += 1
+        return plan
+
+    def store(self, key: PlanKey, plan: Plan) -> None:
+        self._plans[key.encode()] = plan
+        if self.path is not None:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    # -- compiled executables ------------------------------------------------
+    def engine(self, spec: StencilSpec, plan: Plan) -> StencilEngine:
+        """The (memoized) compiled engine realizing ``plan`` for ``spec``."""
+        k = (spec_fingerprint(spec), plan)
+        eng = self._engines.get(k)
+        if eng is None:
+            self.stats.engine_builds += 1
+            eng = StencilEngine(spec, backend=plan.backend, L=plan.L,
+                                star_fast_path=plan.star_fast_path,
+                                fuse_rows=plan.fuse_rows)
+            self._engines[k] = eng
+        else:
+            self.stats.engine_hits += 1
+        return eng
+
+    def engine_plans(self, spec: StencilSpec) -> frozenset:
+        """Plans that currently have a cached engine for ``spec``."""
+        fp = spec_fingerprint(spec)
+        return frozenset(p for f, p in self._engines if f == fp)
+
+    def prune_engines(self, spec: StencilSpec, keep) -> int:
+        """Drop cached engines for ``spec`` whose plan is not in ``keep``.
+
+        Used after a timed tune: losing candidates' jitted executables
+        would otherwise live for the cache's lifetime. Returns #dropped.
+        """
+        fp = spec_fingerprint(spec)
+        drop = [k for k in self._engines if k[0] == fp and k[1] not in keep]
+        for k in drop:
+            del self._engines[k]
+            self._batched.pop(k, None)
+        return len(drop)
+
+    def batched(self, spec: StencilSpec, plan: Plan) -> Callable:
+        """jit(vmap(engine)) over a leading batch axis, memoized."""
+        k = (spec_fingerprint(spec), plan)
+        fn = self._batched.get(k)
+        if fn is None:
+            eng = self.engine(spec, plan)
+            fn = jax.jit(jax.vmap(eng._fn))
+            self._batched[k] = fn
+        return fn
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str | os.PathLike | None = None) -> Path:
+        """Atomically write all plans as JSON; returns the path written."""
+        target = Path(path).expanduser() if path else self.path
+        if target is None:
+            raise ValueError("no persistence path set for this cache")
+        target.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"version": _FORMAT_VERSION,
+                   "plans": {k: p.to_dict() for k, p in self._plans.items()}}
+        fd, tmp = tempfile.mkstemp(dir=str(target.parent),
+                                   prefix=target.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, target)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self.stats.saves += 1
+        return target
+
+    def load(self, path: str | os.PathLike | None = None,
+             missing_ok: bool = False) -> int:
+        """Merge plans from a JSON file; returns the number loaded."""
+        source = Path(path).expanduser() if path else self.path
+        if source is None:
+            raise ValueError("no persistence path set for this cache")
+        if not source.exists():
+            if missing_ok:
+                return 0
+            raise FileNotFoundError(source)
+        try:
+            payload = json.loads(source.read_text())
+            if payload.get("version") != _FORMAT_VERSION:
+                return 0
+            plans = {k: Plan.from_dict(d)
+                     for k, d in payload.get("plans", {}).items()}
+        except (OSError, ValueError, KeyError, TypeError):
+            return 0               # corrupt/unreadable cache: retune, don't crash
+        self._plans.update(plans)
+        self.stats.loads += 1
+        return len(plans)
+
+    def clear(self, remove_file: bool = False) -> None:
+        self._plans.clear()
+        self._engines.clear()
+        self._batched.clear()
+        if remove_file and self.path is not None and self.path.exists():
+            self.path.unlink()
+
+
+# ---------------------------------------------------------------------------
+# process-wide default cache
+# ---------------------------------------------------------------------------
+
+_default: Optional[PlanCache] = None
+
+
+def default_cache() -> PlanCache:
+    """The shared cache behind apply_stencil/tuned_apply.
+
+    Persists iff ``REPRO_TUNER_CACHE`` names a file path at first use.
+    """
+    global _default
+    if _default is None:
+        _default = PlanCache(path=os.environ.get(CACHE_ENV_VAR) or None)
+    return _default
+
+
+def reset_default_cache() -> None:
+    """Drop the process-wide cache (next default_cache() re-reads the env)."""
+    global _default
+    _default = None

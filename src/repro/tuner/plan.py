@@ -1,0 +1,106 @@
+"""Execution plans and their cache keys.
+
+A :class:`Plan` is everything ``StencilEngine`` needs beyond the spec
+itself — the knobs SPIDER fixes at compile time.  A :class:`PlanKey`
+identifies the tuning problem: the *stencil* (content fingerprint, not
+object identity), the *input shape bucket* (next power of two per dim,
+so nearby sizes share one plan while jit still specializes exact
+shapes), the *dtype*, and the *device kind* (cpu/tpu/gpu — a plan tuned
+on CPU must not be trusted on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import StencilSpec
+from repro.core.transform import default_l
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Tuned engine configuration (hashable; JSON round-trippable)."""
+
+    backend: str
+    L: int
+    fuse_rows: bool = False
+    star_fast_path: bool = True
+
+    def to_dict(self) -> dict:
+        return {"backend": self.backend, "L": int(self.L),
+                "fuse_rows": bool(self.fuse_rows),
+                "star_fast_path": bool(self.star_fast_path)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        return cls(backend=str(d["backend"]), L=int(d["L"]),
+                   fuse_rows=bool(d.get("fuse_rows", False)),
+                   star_fast_path=bool(d.get("star_fast_path", True)))
+
+    @classmethod
+    def default(cls, spec: StencilSpec, backend: str = "direct",
+                L: int | None = None) -> "Plan":
+        """The plan `StencilEngine(spec, backend)` would have used."""
+        return cls(backend=backend,
+                   L=L if L is not None else default_l(spec.radius))
+
+    def describe(self) -> str:
+        """Compact human-readable form, e.g. ``sptc/L8/fused``."""
+        return f"{self.backend}/L{self.L}{'/fused' if self.fuse_rows else ''}"
+
+
+def spec_fingerprint(spec: StencilSpec) -> str:
+    """Content hash of a stencil spec (shape/ndim/radius/weights)."""
+    h = hashlib.sha256()
+    h.update(f"{spec.shape}|{spec.ndim}|{spec.radius}|".encode())
+    h.update(np.ascontiguousarray(spec.weights, dtype=np.float64).tobytes())
+    return h.hexdigest()[:16]
+
+
+def shape_bucket(shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Round every dim up to the next power of two (min 1)."""
+    return tuple(1 << max(0, int(np.ceil(np.log2(max(1, s))))) for s in shape)
+
+
+def dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def device_kind() -> str:
+    """Coarse device class the plan was tuned for: cpu | tpu | gpu."""
+    return jax.default_backend()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Cache key for one tuning problem."""
+
+    spec_fp: str
+    bucket: Tuple[int, ...]
+    dtype: str
+    device: str
+
+    def encode(self) -> str:
+        """Stable string form used as the JSON dict key."""
+        shape = "x".join(str(s) for s in self.bucket)
+        return f"spec={self.spec_fp};shape={shape};dtype={self.dtype};dev={self.device}"
+
+    @classmethod
+    def decode(cls, s: str) -> "PlanKey":
+        parts = dict(field.split("=", 1) for field in s.split(";"))
+        bucket = tuple(int(v) for v in parts["shape"].split("x") if v)
+        return cls(spec_fp=parts["spec"], bucket=bucket,
+                   dtype=parts["dtype"], device=parts["dev"])
+
+
+def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype,
+             device: str | None = None) -> PlanKey:
+    return PlanKey(spec_fp=spec_fingerprint(spec),
+                   bucket=shape_bucket(tuple(shape)),
+                   dtype=dtype_name(dtype),
+                   device=device if device is not None else device_kind())

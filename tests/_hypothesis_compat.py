@@ -1,0 +1,24 @@
+"""Import hypothesis, or provide skipping stand-ins.
+
+hypothesis is a dev extra (requirements-dev.txt); the property-based
+tests skip without it while deterministic sweeps run unconditionally.
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(**_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(**_kwargs):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 — stand-in namespace, never executed
+        integers = staticmethod(lambda *a, **k: None)

@@ -6,7 +6,7 @@ matrix into a valid 2:4 pattern for EVERY radius, and the compressed
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sparsify import (Sparse24, apply_col_perm, decode_24,
                                  encode_24, is_24_sparse,
@@ -154,6 +154,64 @@ def test_sparsify_stencil_kernel(r):
     dense_perm = decode_24(sk.sparse)
     np.testing.assert_allclose(
         apply_col_perm(dense_perm, np.argsort(sk.perm)), K, rtol=1e-12)
+
+
+@pytest.mark.parametrize("r", [1, 2, 3, 4])
+def test_encode_decode_roundtrip_banded_radii(r):
+    """Deterministic encode/decode round-trip over the actual stencil bands
+    (radii 1-4), exact to the bit — no hypothesis required."""
+    w = np.random.default_rng(100 + r).normal(size=2 * r + 1)
+    w[w == 0] = 0.5
+    L = default_l(r)
+    Kp = apply_col_perm(kernel_matrix(w, L=L, pad_width=True),
+                        strided_swap_perm(L))
+    sp = encode_24(Kp)
+    np.testing.assert_array_equal(decode_24(sp), Kp)
+    # the full pipeline's compressed operand decodes to the same matrix
+    sk = sparsify_stencil_kernel(w, L=L)
+    np.testing.assert_array_equal(decode_24(sk.sparse), Kp)
+    meta = sp.meta.reshape(sp.m, sp.k // 4, 2)
+    assert np.all(meta[..., 0] < meta[..., 1])
+    assert np.all((meta >= 0) & (meta < 4))
+
+
+def _meta_bits_ref(meta: np.ndarray) -> np.ndarray:
+    """Independent scalar-loop recomputation of Sparse24.meta_bits()."""
+    m, half = meta.shape
+    nwords = -(-half // 16)
+    words = np.zeros((m, nwords), dtype=np.uint32)
+    for i in range(m):
+        for j in range(half):
+            words[i, j // 16] |= np.uint32(int(meta[i, j]) & 0x3) << (2 * (j % 16))
+    return words
+
+
+@pytest.mark.parametrize("r", [1, 2, 3, 4])
+def test_meta_bits_matches_scalar_reference(r):
+    """Bit packing of real stencil metadata == LSB-first scalar reference."""
+    sk = sparsify_stencil_kernel(np.random.default_rng(r).normal(size=2 * r + 1))
+    np.testing.assert_array_equal(sk.sparse.meta_bits(),
+                                  _meta_bits_ref(sk.sparse.meta))
+
+
+def test_meta_bits_multiword_rows():
+    """Rows wider than 16 segments span multiple uint32 words (k/2 > 16)."""
+    rng = np.random.default_rng(3)
+    k = 80                                      # 20 segments -> half = 40 -> 3 words
+    mat = np.zeros((4, k))
+    for i in range(4):
+        for s in range(k // 4):
+            pos = rng.choice(4, size=2, replace=False)
+            mat[i, 4 * s + np.sort(pos)] = rng.normal(size=2)
+    sp = encode_24(mat)
+    words = sp.meta_bits()
+    assert words.shape == (4, 3) and words.dtype == np.uint32
+    np.testing.assert_array_equal(words, _meta_bits_ref(sp.meta))
+    # every 2-bit field decodes back to the stored metadata (padding = 0)
+    unpacked = np.zeros_like(sp.meta)
+    for j in range(sp.meta.shape[1]):
+        unpacked[:, j] = (words[:, j // 16] >> (2 * (j % 16))) & 0x3
+    np.testing.assert_array_equal(unpacked, sp.meta)
 
 
 def test_sparsity_ratio_maximizes_sptc_utilization():

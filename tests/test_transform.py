@@ -1,7 +1,7 @@
 """Stencil -> kernel-matrix transform (paper §3.2.1) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.stencil import make_stencil, star_mask, StencilSpec
 from repro.core.transform import (axis_decompose_star, band_density,

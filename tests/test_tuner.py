@@ -1,0 +1,228 @@
+"""repro.tuner: plan keying, cache-hit/no-rejit, persistence, correctness.
+
+Acceptance (ISSUE 1): repeated tuned_apply on the same (spec, shape,
+dtype) must hit the plan cache with zero re-trace/re-jit; persistence
+must round-trip through the JSON file; and every tuned plan must stay
+numerically equal to the `direct` backend oracle across paper_suite().
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import BACKENDS, apply_stencil
+from repro.core.stencil import make_stencil, paper_suite
+from repro.kernels.dispatch import applicable_backends
+from repro.tuner import (Plan, PlanCache, autotune, candidate_plans, plan_for,
+                         plan_key, shape_bucket, spec_fingerprint, static_cost,
+                         tuned_apply, tuned_apply_batched)
+from repro.tuner.plan import PlanKey
+
+
+def _x(spec, dims, rng, dtype=jnp.float32):
+    shape = tuple(s + 2 * spec.radius for s in dims)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# plans and keys
+# ---------------------------------------------------------------------------
+
+def test_plan_dict_roundtrip():
+    p = Plan(backend="sptc", L=8, fuse_rows=True, star_fast_path=False)
+    assert Plan.from_dict(p.to_dict()) == p
+
+
+def test_plan_key_encode_decode_roundtrip():
+    key = PlanKey(spec_fp="abc123", bucket=(64, 128), dtype="float32",
+                  device="cpu")
+    assert PlanKey.decode(key.encode()) == key
+
+
+def test_spec_fingerprint_is_content_hash():
+    a = make_stencil("box", 2, 2, seed=1)
+    b = make_stencil("box", 2, 2, seed=1)     # same content, new object
+    c = make_stencil("box", 2, 2, seed=2)
+    assert spec_fingerprint(a) == spec_fingerprint(b)
+    assert spec_fingerprint(a) != spec_fingerprint(c)
+
+
+def test_shape_bucket_rounds_up_to_pow2():
+    assert shape_bucket((37, 41)) == (64, 64)
+    assert shape_bucket((64,)) == (64,)
+    assert shape_bucket((65, 1)) == (128, 1)
+    # nearby sizes share a plan; the key still splits on dtype and device
+    spec = make_stencil("star", 2, 1, seed=0)
+    assert plan_key(spec, (60, 60), jnp.float32) == \
+        plan_key(spec, (64, 33), jnp.float32)
+    assert plan_key(spec, (60, 60), jnp.float32) != \
+        plan_key(spec, (60, 60), jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration + cost model
+# ---------------------------------------------------------------------------
+
+def test_candidates_are_applicable_and_valid():
+    for spec in paper_suite():
+        plans = candidate_plans(spec)
+        assert plans
+        ok = applicable_backends(spec)
+        for p in plans:
+            assert p.backend in ok and p.backend in BACKENDS
+            assert p.L % 2 == 0 and p.L >= 2 * spec.radius + 2
+            assert static_cost(spec, p) > 0
+
+
+def test_cost_mode_autotune_builds_nothing():
+    spec = make_stencil("box", 2, 3, seed=0)
+    calls = []
+    res = autotune(spec, (70, 70), mode="cost",
+                   engine_factory=lambda *a: calls.append(a))
+    assert res.mode == "cost" and not calls
+    assert res.plan in candidate_plans(spec)
+    # the model prefers the SpTC path (K/2 MACs on the matrix unit) for a
+    # large box stencil — the paper's headline claim
+    assert res.plan.backend == "sptc"
+
+
+# ---------------------------------------------------------------------------
+# cache behavior: plan hits, zero re-jit
+# ---------------------------------------------------------------------------
+
+def test_repeat_apply_hits_cache_no_rejit(rng):
+    spec = make_stencil("box", 2, 2, seed=3)
+    x = _x(spec, (30, 34), rng)
+    cache = PlanCache()
+    y1 = tuned_apply(spec, x, cache=cache, mode="cost")
+    assert cache.stats.plan_misses == 1 and cache.stats.tunes == 1
+    builds = cache.stats.engine_builds
+    assert builds == 1
+    y2 = tuned_apply(spec, x, cache=cache, mode="cost")
+    assert cache.stats.engine_builds == builds      # no new engine
+    assert cache.stats.plan_hits >= 1 and cache.stats.tunes == 1
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # the jitted executable was not re-traced either
+    plan = plan_for(spec, x.shape, x.dtype, cache=cache, mode="cost")
+    eng = cache.engine(spec, plan)
+    if hasattr(eng._fn, "_cache_size"):
+        assert eng._fn._cache_size() == 1
+
+
+def test_apply_stencil_reuses_engine_across_calls(rng):
+    """The seed's dead `_cached_engine` replacement: the functional entry
+    point must not build a fresh engine per call."""
+    from repro.tuner.cache import default_cache
+    spec = make_stencil("star", 2, 2, seed=8)
+    x = _x(spec, (26, 28), rng)
+    apply_stencil(spec, x, backend="gemm")
+    builds = default_cache().stats.engine_builds
+    apply_stencil(spec, x, backend="gemm")
+    assert default_cache().stats.engine_builds == builds
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_plan_persistence_roundtrip(tmp_path, rng):
+    path = tmp_path / "plans.json"
+    spec = make_stencil("box", 2, 1, seed=5)
+    x = _x(spec, (22, 26), rng)
+
+    cache_a = PlanCache(path=path)
+    plan = plan_for(spec, x.shape, x.dtype, cache=cache_a, mode="cost")
+    assert path.exists() and cache_a.stats.saves >= 1
+
+    cache_b = PlanCache(path=path)                 # fresh process, warm file
+    assert cache_b.stats.loads == 1 and len(cache_b) == len(cache_a)
+    assert plan_for(spec, x.shape, x.dtype, cache=cache_b) == plan
+    assert cache_b.stats.tunes == 0                # no retune after reload
+
+
+def test_persistence_ignores_corrupt_file(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json")
+    cache = PlanCache(path=path)
+    assert len(cache) == 0 and cache.stats.loads == 0
+
+
+# ---------------------------------------------------------------------------
+# correctness: tuned plans == direct oracle across the paper suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["cost"])
+def test_tuned_matches_direct_over_paper_suite(mode, rng):
+    cache = PlanCache()
+    for spec in paper_suite():
+        dims = {1: (131,), 2: (24, 27)}[spec.ndim]
+        x = _x(spec, dims, rng)
+        got = tuned_apply(spec, x, cache=cache, mode=mode)
+        want = apply_stencil(spec, x, backend="direct")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_every_candidate_plan_matches_direct(rng):
+    """Stronger than the tuned pick: ALL candidates are valid executions."""
+    spec = make_stencil("box", 2, 2, seed=6)
+    x = _x(spec, (21, 23), rng)
+    cache = PlanCache()
+    want = np.asarray(apply_stencil(spec, x, backend="direct"))
+    for plan in candidate_plans(spec):
+        got = np.asarray(cache.engine(spec, plan)(x))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=str(plan))
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_per_instance(rng):
+    spec = make_stencil("star", 2, 1, seed=7)
+    xs = jnp.asarray(rng.normal(size=(5, 40, 44)), jnp.float32)
+    cache = PlanCache()
+    got = tuned_apply_batched(spec, xs, cache=cache, mode="cost")
+    assert got.shape == (5, 38, 42)
+    for i in range(xs.shape[0]):
+        want = apply_stencil(spec, xs[i], backend="direct")
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_batched_reuses_compiled_program(rng):
+    spec = make_stencil("box", 1, 1, seed=9)
+    xs = jnp.asarray(rng.normal(size=(4, 66)), jnp.float32)
+    cache = PlanCache()
+    tuned_apply_batched(spec, xs, cache=cache, mode="cost")
+    builds = cache.stats.engine_builds
+    tuned_apply_batched(spec, xs, cache=cache, mode="cost")
+    assert cache.stats.engine_builds == builds
+
+
+# ---------------------------------------------------------------------------
+# timing mode (small, smoke-level — CI stays fast)
+# ---------------------------------------------------------------------------
+
+def test_timing_mode_smoke(rng):
+    spec = make_stencil("box", 1, 1, seed=10)
+    x = _x(spec, (96,), rng)
+    res = autotune(spec, x.shape, x.dtype, mode="time", warmup=1, iters=2)
+    assert res.mode == "time"
+    assert res.plan in candidate_plans(spec)
+    assert any(c.error is None and c.score > 0 for c in res.candidates)
+
+
+def test_time_mode_prunes_losing_candidate_engines(rng):
+    """A timed tune must not leave every losing candidate's jitted engine
+    resident — only the winner (and pre-existing engines) survive."""
+    spec = make_stencil("box", 1, 1, seed=11)
+    x = _x(spec, (80,), rng)
+    cache = PlanCache()
+    plan = plan_for(spec, x.shape, x.dtype, cache=cache, mode="time", iters=2)
+    assert cache.engine_plans(spec) == frozenset({plan})
+
+
+def test_autotune_rejects_bad_mode():
+    with pytest.raises(ValueError):
+        autotune(make_stencil("box", 1, 1), (32,), mode="fastest")
