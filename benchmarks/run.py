@@ -15,7 +15,7 @@ def _section(title):
 def main() -> None:
     t0 = time.time()
     from benchmarks import (fig9_throughput, fig10_scaling, kernel_bench,
-                            roofline_table, table1_costs)
+                            roofline_table, serving_bench, table1_costs)
     _section("Table 1 — analytic cost model (paper §2.3/§3.2.3)")
     table1_costs.main()
     _section("Figure 9 — throughput across stencil shapes")
@@ -24,6 +24,8 @@ def main() -> None:
     fig10_scaling.main()
     _section("Kernel microbench — dense GEMM vs 2:4 SpMM")
     kernel_bench.main()
+    _section("Serving driver — continuous batching (BENCH_serving.json)")
+    serving_bench.main([], out="BENCH_serving.json", quick=True)
     _section("Roofline table — dry-run derived (EXPERIMENTS.md §Roofline)")
     roofline_table.main()
     print(f"\n# benchmarks completed in {time.time()-t0:.1f}s")

@@ -1,12 +1,14 @@
-"""Serving launcher: batched prefill + decode over the host mesh.
+"""Serving launcher: continuous-batched generate over the shared scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --batch 4 --prompt-len 32 --new-tokens 32
+        --requests 8 --max-batch 4 --prompt-len 32 --new-tokens 32
 
-Production notes: the same prefill/decode graphs lower against the
-(16,16) / (2,16,16) production meshes in launch/dryrun.py; a fleet serving
-deployment runs this driver per model replica with a front-end batcher
-filling position-aligned batches.
+Requests are submitted one prompt at a time — as a front end would
+deliver them — and the :class:`repro.serving.GenerateDriver` packs them
+into position-aligned batches on the SAME ``BatchScheduler`` layer the
+stencil driver (`serving/stencil_driver.py`) uses for grid traffic, so
+occupancy/latency/backpressure metrics mean the same thing for both
+traffic classes.  A fleet deployment runs this per model replica.
 """
 from __future__ import annotations
 
@@ -20,14 +22,35 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.models import model as M
 from repro.models.nn import count_params
-from repro.serving import engine as E
+from repro.serving import BatchPolicy, GenerateDriver
+
+
+def _request_stream(cfg, n_requests, prompt_len, seed=1):
+    """Per-request prompts (and memories for vlm/encdec), like a front end."""
+    key = jax.random.PRNGKey(seed)
+    for i in range(n_requests):
+        key, kp, km = jax.random.split(key, 3)
+        prompt = jax.random.randint(kp, (prompt_len,), 0, cfg.vocab)
+        mem = None
+        if cfg.family == "vlm":
+            mem = jax.random.normal(km, (cfg.n_img_tokens, cfg.d_model),
+                                    jnp.float32)
+        elif cfg.family == "encdec":
+            mem = jax.random.normal(km, (cfg.n_frames, cfg.d_model),
+                                    jnp.float32)
+        yield prompt, mem
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of single-prompt requests (default: batch)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="deprecated alias for --max-batch")
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=None)
@@ -38,42 +61,33 @@ def main(argv=None):
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
     print(f"arch={cfg.name} params={count_params(params):,}")
 
+    max_batch = args.max_batch or args.batch
+    n_requests = args.requests or max_batch
     cache_len = args.cache_len or (args.prompt_len + args.new_tokens)
-    key = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-    mem = None
-    if cfg.family == "vlm":
-        mem = jax.random.normal(key, (args.batch, cfg.n_img_tokens,
-                                      cfg.d_model), jnp.float32)
-    elif cfg.family == "encdec":
-        mem = jax.random.normal(key, (args.batch, cfg.n_frames,
-                                      cfg.d_model), jnp.float32)
+    policy = BatchPolicy(max_batch=max_batch, max_wait_ms=args.max_wait_ms)
 
+    # autostart=False: enqueue the full wave first so the opening flush
+    # already packs max_batch-sized aligned batches (steady-state shape).
+    driver = GenerateDriver(params, cfg, cache_len=cache_len, policy=policy,
+                            greedy=args.greedy, autostart=False)
     t0 = time.monotonic()
-    logits, cc = jax.jit(
-        lambda p, t, m: E.prefill(p, cfg, t, cache_len, memory=m)
-    )(params, prompt, mem)
-    jax.block_until_ready(logits)
-    t_prefill = time.monotonic() - t0
-    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.0f}ms "
-          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    futures = [driver.submit(prompt, args.new_tokens, memory=mem)
+               for prompt, mem in _request_stream(cfg, n_requests,
+                                                  args.prompt_len)]
+    driver.start()
+    results = [f.result() for f in futures]
+    dt = time.monotonic() - t0
+    driver.close()
 
-    step = jax.jit(lambda p, c, t: E.decode_step(p, cfg, c, t))
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    outs = [tok]
-    t0 = time.monotonic()
-    for _ in range(args.new_tokens - 1):
-        lg, cc = step(params, cc, tok)
-        tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.monotonic() - t0
-    rate = args.batch * (args.new_tokens - 1) / max(t_dec, 1e-9)
-    print(f"decode {args.new_tokens-1} steps: {t_dec*1e3:.0f}ms "
-          f"({rate:.0f} tok/s, {t_dec/(args.new_tokens-1)*1e3:.1f} ms/step)")
-    gen = np.asarray(jnp.concatenate(outs, axis=1))
-    print(f"generated[0,:16] = {gen[0,:16].tolist()}")
+    stats = driver.metrics()["overall"]
+    tok = n_requests * args.new_tokens
+    print(f"served {n_requests} requests ({tok} new tokens) in {dt*1e3:.0f}ms"
+          f" ({tok/dt:.0f} tok/s)")
+    print(f"batches={stats['batches']} occupancy={stats['batch_occupancy']}"
+          f" p50={stats['latency']['p50_ms']:.0f}ms"
+          f" p99={stats['latency']['p99_ms']:.0f}ms")
+    gen = np.asarray(jnp.stack(results))
+    print(f"generated[0,:16] = {gen[0, :16].tolist()}")
     return gen
 
 

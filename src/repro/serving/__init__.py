@@ -1,4 +1,12 @@
 from repro.serving import cache
 from repro.serving.engine import decode_step, generate, prefill
+from repro.serving.lm_driver import GenerateDriver
+from repro.serving.metrics import GroupMetrics, LatencyWindow, MetricsRegistry
+from repro.serving.scheduler import BatchPolicy, BatchScheduler, QueueFullError
+from repro.serving.stencil_driver import StencilDriver
 
-__all__ = ["cache", "decode_step", "generate", "prefill"]
+__all__ = [
+    "BatchPolicy", "BatchScheduler", "GenerateDriver", "GroupMetrics",
+    "LatencyWindow", "MetricsRegistry", "QueueFullError", "StencilDriver",
+    "cache", "decode_step", "generate", "prefill",
+]

@@ -5,8 +5,10 @@ dry-run cells: one new token against a ring KV cache (or O(1) SSM state).
 Layer loops are ``lax.scan`` over stacked params+caches, so the compiled
 artifact is depth-independent.
 
-Batched decoding is position-aligned (scalar ``pos``); a batched serving
-driver (serving/driver.py) schedules requests into these aligned batches.
+Batched decoding is position-aligned (scalar ``pos``); the continuous-
+batching driver (`serving/lm_driver.py`, on the shared
+`serving/scheduler.py` layer — same machinery as the stencil driver in
+`serving/stencil_driver.py`) packs requests into these aligned batches.
 """
 from __future__ import annotations
 

@@ -1,0 +1,148 @@
+"""LM generate driver on the shared continuous-batching scheduler.
+
+Decode batches must be *position-aligned* (scalar ``pos`` against ring
+KV caches — see `serving/engine.py`), so the batchable unit is
+``(prompt_len, n_new, memory signature)``: requests with the same
+signature stack into one ``generate`` call (prefill + scanned decode)
+and stream back per-request token arrays.
+
+This is the LM half of the one-scheduling-layer refactor: it reuses the
+exact :class:`~repro.serving.scheduler.BatchScheduler` +
+:class:`~repro.serving.metrics.MetricsRegistry` machinery the stencil
+driver (`serving/stencil_driver.py`) runs on, so occupancy/latency/
+backpressure semantics — and their metrics — are identical across both
+traffic classes.
+
+    driver = GenerateDriver(params, cfg, cache_len=64)
+    fut = driver.submit(prompt_tokens, n_new=16)      # (S,) int32
+    toks = fut.result()                               # (n_new,) int32
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serving import engine as E
+from repro.serving.metrics import MetricsRegistry, merged_latency
+from repro.serving.scheduler import BatchPolicy, BatchScheduler, QueueFullError
+
+
+class _GenJob:
+    __slots__ = ("prompt", "memory", "t_submit")
+
+    def __init__(self, prompt, memory):
+        self.prompt = prompt
+        self.memory = memory
+        self.t_submit = time.monotonic()
+
+
+class GenerateDriver:
+    """Packs single-prompt generate requests into aligned batches."""
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 cache_len: int | None = None,
+                 policy: BatchPolicy | None = None,
+                 greedy: bool = True,
+                 autostart: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self.metrics_registry = MetricsRegistry()
+        self._sched = BatchScheduler(self._run_batch, policy,
+                                     name=f"lm-{cfg.name}",
+                                     autostart=autostart)
+
+    # -- admission -----------------------------------------------------------
+    def group_key(self, prompt, n_new: int, memory=None) -> str:
+        mem = ("none" if memory is None
+               else "x".join(str(s) for s in memory.shape))
+        return f"len={prompt.shape[0]};new={n_new};mem={mem}"
+
+    def submit(self, prompt, n_new: int, memory=None) -> Future:
+        """Enqueue one request. ``prompt`` is (S,) int32; result (n_new,)."""
+        prompt = jnp.asarray(prompt)
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D token array, got {tuple(prompt.shape)}")
+        needs_mem = self.cfg.family in ("vlm", "encdec")
+        if needs_mem and memory is None:
+            raise ValueError(f"family {self.cfg.family!r} requires a memory")
+        key = (self.group_key(prompt, n_new, memory), n_new)
+        m = self.metrics_registry.group(key[0])
+        try:
+            fut = self._sched.submit(key, _GenJob(prompt, memory))
+        except QueueFullError:
+            m.rejected += 1
+            raise
+        m.submitted += 1
+        return fut
+
+    # -- lifecycle / introspection -------------------------------------------
+    def start(self) -> "GenerateDriver":
+        self._sched.start()
+        return self
+
+    def drain(self) -> None:
+        self._sched.drain()
+
+    def close(self, wait: bool = True) -> None:
+        self._sched.shutdown(wait=wait)
+
+    def __enter__(self) -> "GenerateDriver":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(wait=True)
+
+    def queue_depth(self) -> int:
+        return self._sched.queue_depth()
+
+    def metrics(self) -> dict:
+        groups = [self.metrics_registry.group(k)
+                  for k in self.metrics_registry.keys()]
+        overall = self.metrics_registry.totals()
+        overall["latency"] = merged_latency(groups).as_dict()
+        overall["queue_depth"] = self._sched.queue_depth()
+        return {
+            "arch": self.cfg.name,
+            "policy": {
+                "max_batch": self._sched.policy.max_batch,
+                "max_wait_ms": self._sched.policy.max_wait_ms,
+                "max_queue": self._sched.policy.max_queue,
+                "overflow": self._sched.policy.overflow,
+            },
+            "overall": overall,
+            "groups": self.metrics_registry.as_dict(),
+        }
+
+    # -- execution -----------------------------------------------------------
+    def _run_batch(self, key, jobs: List[_GenJob]) -> list:
+        group_key, n_new = key
+        m = self.metrics_registry.group(group_key)
+        prompt_len = jobs[0].prompt.shape[0]
+        cache_len = self.cache_len or (prompt_len + n_new)
+        try:
+            prompts = jnp.stack([j.prompt for j in jobs]).astype(jnp.int32)
+            memory = (jnp.stack([j.memory for j in jobs])
+                      if jobs[0].memory is not None else None)
+            toks, _ = E.generate(self.params, self.cfg, prompts, n_new,
+                                 cache_len, memory=memory,
+                                 greedy=self.greedy)
+        except BaseException:
+            m.failed += len(jobs)
+            raise
+        toks.block_until_ready()
+        now = time.monotonic()
+        m.batches += 1
+        m.batched_jobs += len(jobs)
+        m.completed += len(jobs)
+        m.payload_elems += len(jobs) * (prompt_len + n_new)
+        m.padded_elems += len(jobs) * (prompt_len + n_new)
+        for j in jobs:
+            m.latency.observe(now - j.t_submit)
+        return [toks[i] for i in range(len(jobs))]

@@ -1,0 +1,142 @@
+"""Serving metrics: admission counters + latency quantiles per plan group.
+
+Every driver that schedules traffic through ``serving.scheduler`` keeps
+one :class:`GroupMetrics` per batch group (for stencils: one per tuner
+plan key; for LM decode: one per aligned-batch signature).  The driver
+surfaces them through ``driver.metrics()`` alongside the tuner's
+``PlanCache.stats`` so a fleet operator can see, per plan: queue depth,
+batch occupancy, padding efficiency, p50/p99 latency, and reject counts.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Dict, Iterable, Optional
+
+
+class LatencyWindow:
+    """Bounded sample window with percentile readout (seconds in, ms out)."""
+
+    def __init__(self, maxlen: int = 4096):
+        self._samples = collections.deque(maxlen=maxlen)
+
+    def observe(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, q: float) -> float:
+        """The q-th percentile (0 < q <= 100) of the window, in seconds."""
+        if not self._samples:
+            return 0.0
+        ordered = sorted(self._samples)
+        idx = max(0, min(len(ordered) - 1,
+                         int(-(-q * len(ordered) // 100)) - 1))
+        return ordered[idx]
+
+    def as_dict(self) -> dict:
+        n = len(self._samples)
+        return {
+            "count": n,
+            "p50_ms": round(self.percentile(50) * 1e3, 3),
+            "p99_ms": round(self.percentile(99) * 1e3, 3),
+            "mean_ms": round(sum(self._samples) / n * 1e3, 3) if n else 0.0,
+            "max_ms": round(max(self._samples) * 1e3, 3) if n else 0.0,
+        }
+
+
+@dataclasses.dataclass
+class GroupMetrics:
+    """Admission + execution counters for one batch group."""
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    rejected: int = 0
+    batches: int = 0
+    batched_jobs: int = 0
+    payload_elems: int = 0        # useful elements actually requested
+    padded_elems: int = 0         # elements executed after padding
+    latency: LatencyWindow = dataclasses.field(default_factory=LatencyWindow)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean jobs per executed super-batch (the continuous-batching win)."""
+        return self.batched_jobs / self.batches if self.batches else 0.0
+
+    @property
+    def padding_efficiency(self) -> float:
+        """Fraction of executed elements that were real payload (1.0 = none wasted)."""
+        return (self.payload_elems / self.padded_elems
+                if self.padded_elems else 1.0)
+
+    def as_dict(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "rejected": self.rejected,
+            "batches": self.batches,
+            "batch_occupancy": round(self.occupancy, 3),
+            "padding_efficiency": round(self.padding_efficiency, 4),
+            "latency": self.latency.as_dict(),
+        }
+
+
+class MetricsRegistry:
+    """Thread-safe map of group key -> GroupMetrics."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._groups: Dict[str, GroupMetrics] = {}
+
+    def group(self, key: str) -> GroupMetrics:
+        with self._lock:
+            m = self._groups.get(key)
+            if m is None:
+                m = self._groups[key] = GroupMetrics()
+            return m
+
+    def keys(self) -> Iterable[str]:
+        with self._lock:
+            return list(self._groups)
+
+    def totals(self) -> dict:
+        """Aggregates across every group (occupancy over all batches)."""
+        with self._lock:
+            groups = list(self._groups.values())
+        batches = sum(g.batches for g in groups)
+        jobs = sum(g.batched_jobs for g in groups)
+        return {
+            "groups": len(groups),
+            "submitted": sum(g.submitted for g in groups),
+            "completed": sum(g.completed for g in groups),
+            "failed": sum(g.failed for g in groups),
+            "rejected": sum(g.rejected for g in groups),
+            "batches": batches,
+            "batch_occupancy": round(jobs / batches, 3) if batches else 0.0,
+        }
+
+    def as_dict(self, queue_depth=None) -> dict:
+        """Full per-group dump; ``queue_depth`` maps key -> current depth."""
+        out = {}
+        with self._lock:
+            items = list(self._groups.items())
+        for key, m in items:
+            d = m.as_dict()
+            if queue_depth is not None:
+                d["queue_depth"] = queue_depth(key)
+            out[key] = d
+        return out
+
+
+def merged_latency(groups: Iterable[GroupMetrics],
+                   maxlen: Optional[int] = None) -> LatencyWindow:
+    """One window holding every group's samples (for fleet-level p50/p99)."""
+    merged = LatencyWindow(maxlen=maxlen or 1 << 20)
+    for g in groups:
+        for s in g.latency._samples:
+            merged.observe(s)
+    return merged

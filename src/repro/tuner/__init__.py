@@ -17,8 +17,9 @@ Layers:
   cache.py   in-memory plan + compiled-engine cache with JSON persistence.
   api.py     tuned_apply / tuned_apply_batched / tuned_engine / plan_for.
 """
-from repro.tuner.api import (cache_stats, clear_cache, plan_for, tuned_apply,
-                             tuned_apply_batched, tuned_engine)
+from repro.tuner.api import (batch_group_key, cache_stats, clear_cache,
+                             plan_for, tuned_apply, tuned_apply_batched,
+                             tuned_engine)
 from repro.tuner.cache import PlanCache, default_cache, reset_default_cache
 from repro.tuner.plan import (Plan, PlanKey, plan_key, shape_bucket,
                               spec_fingerprint)
@@ -26,7 +27,8 @@ from repro.tuner.search import TuneResult, autotune, candidate_plans, static_cos
 
 __all__ = [
     "Plan", "PlanKey", "PlanCache", "TuneResult",
-    "autotune", "cache_stats", "candidate_plans", "clear_cache",
+    "autotune", "batch_group_key", "cache_stats", "candidate_plans",
+    "clear_cache",
     "default_cache", "plan_for", "plan_key", "reset_default_cache",
     "shape_bucket", "spec_fingerprint", "static_cost",
     "tuned_apply", "tuned_apply_batched", "tuned_engine",

@@ -67,19 +67,73 @@ def tuned_apply(spec: StencilSpec, x, *, cache: PlanCache | None = None,
     return eng(x)
 
 
+def _validate_batch(spec: StencilSpec, xs):
+    """Normalize ``xs`` to one stacked (B, *spatial) array, loudly.
+
+    Accepts a pre-stacked array or a sequence of per-job arrays.  Every
+    job must share ONE shape and dtype — a jit(vmap) program is shape-
+    monomorphic — and mismatches name the offending shapes instead of
+    failing deep inside ``jnp.stack``/``vmap``.
+    """
+    if isinstance(xs, (list, tuple)):
+        if not xs:
+            raise ValueError("tuned_apply_batched got an empty batch")
+        arrs = [jnp.asarray(x) for x in xs]
+        shapes = [tuple(a.shape) for a in arrs]
+        if len(set(shapes)) > 1:
+            first = shapes[0]
+            bad = next((i, s) for i, s in enumerate(shapes) if s != first)
+            raise ValueError(
+                "tuned_apply_batched requires every job to share one shape "
+                f"(pad or bucket them first — see serving/stencil_driver.py): "
+                f"job 0 has shape {first} but job {bad[0]} has shape {bad[1]}; "
+                f"distinct shapes: {sorted(set(shapes))}")
+        dtypes = sorted({str(a.dtype) for a in arrs})
+        if len(dtypes) > 1:
+            raise ValueError(
+                "tuned_apply_batched requires every job to share one dtype; "
+                f"got {dtypes}")
+        xs = jnp.stack(arrs)
+    if xs.ndim != spec.ndim + 1:
+        raise ValueError(
+            f"tuned_apply_batched expects (B, *spatial-with-halo) with "
+            f"{spec.ndim + 1} dims for {spec.name}, got shape "
+            f"{tuple(xs.shape)}")
+    if any(s <= 2 * spec.radius for s in xs.shape[1:]):
+        raise ValueError(
+            f"every spatial dim must exceed the halo 2r={2 * spec.radius} "
+            f"for {spec.name}, got batch shape {tuple(xs.shape)}")
+    return xs
+
+
 def tuned_apply_batched(spec: StencilSpec, xs, *,
                         cache: PlanCache | None = None,
                         mode: str | None = None,
                         warmup: int = 1, iters: int = 3):
     """Apply ``spec`` to a batch ``xs`` of shape (B, *spatial-with-halo).
 
-    The plan is tuned for one instance; execution is a single
-    jit(vmap(engine)) program — the many-user serving path.
+    ``xs`` may also be a sequence of same-shape per-job arrays (it is
+    validated and stacked).  The plan is tuned for one instance;
+    execution is a single jit(vmap(engine)) program — the many-user
+    serving path (continuously batched by `serving/stencil_driver.py`).
     """
     cache = cache if cache is not None else default_cache()
+    xs = _validate_batch(spec, xs)
     plan = plan_for(spec, tuple(xs.shape[1:]), xs.dtype, cache=cache,
                     mode=mode, warmup=warmup, iters=iters)
     return cache.batched(spec, plan)(xs)
+
+
+def batch_group_key(spec: StencilSpec, shape: Sequence[int], dtype,
+                    device: str | None = None) -> str:
+    """Stable string key a serving driver buckets batchable jobs by.
+
+    Two jobs with equal keys share one tuned plan AND one compiled
+    jit(vmap) program once padded to the bucket shape: the key is the
+    encoded :class:`~repro.tuner.plan.PlanKey` (spec fingerprint ×
+    halo-inclusive shape bucket × dtype × device kind).
+    """
+    return plan_key(spec, tuple(shape), dtype, device).encode()
 
 
 def cache_stats(cache: PlanCache | None = None) -> dict:

@@ -1,0 +1,353 @@
+"""serving driver: plan-key bucketing, padding round-trip, backpressure,
+metrics, scheduler semantics, and the shared LM decode path.
+
+Acceptance (ISSUE 6): for a randomized mix of >=100 jobs across >=3
+specs/shapes, batched-driver outputs must match per-job ``tuned_apply``
+(and the ``direct`` oracle), with measured batch occupancy > 1.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import apply_stencil
+from repro.core.stencil import make_stencil
+from repro.serving import (BatchPolicy, BatchScheduler, QueueFullError,
+                           StencilDriver)
+from repro.serving.metrics import LatencyWindow
+from repro.tuner import PlanCache, batch_group_key, tuned_apply
+
+MODE = "cost"          # static cost model: no timing loops in unit tests
+
+
+def _grid(spec, dims, rng, dtype=jnp.float32):
+    shape = tuple(s + 2 * spec.radius for s in dims)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _mixed_jobs(n, rng, lo=12, hi=28):
+    specs = [make_stencil("star", 2, 1, seed=1),
+             make_stencil("box", 2, 2, seed=2),
+             make_stencil("box", 1, 1, seed=3)]
+    jobs = []
+    for i in range(n):
+        spec = specs[i % len(specs)]
+        if spec.ndim == 2:
+            dims = (int(rng.integers(lo, hi)), int(rng.integers(lo, hi)))
+        else:
+            dims = (int(rng.integers(4 * lo, 4 * hi)),)
+        jobs.append((spec, _grid(spec, dims, rng)))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# plan-key bucketing
+# ---------------------------------------------------------------------------
+
+def test_group_key_is_tuner_plan_key(rng):
+    spec = make_stencil("star", 2, 1, seed=0)
+    drv = StencilDriver(cache=PlanCache(), mode=MODE, autostart=False)
+    a = _grid(spec, (20, 24), rng)           # both bucket to (32, 32) + halo
+    b = _grid(spec, (28, 30), rng)
+    assert drv.group_key(spec, a) == drv.group_key(spec, b)
+    assert drv.group_key(spec, a) == batch_group_key(spec, a.shape, a.dtype)
+    # dtype and spec content split the group
+    c = _grid(spec, (20, 24), rng, jnp.bfloat16)
+    assert drv.group_key(spec, c) != drv.group_key(spec, a)
+    other = make_stencil("star", 2, 1, seed=9)
+    assert drv.group_key(other, a) != drv.group_key(spec, a)
+    drv.close()
+
+
+def test_exact_padding_splits_groups_by_shape(rng):
+    spec = make_stencil("box", 1, 1, seed=4)
+    drv = StencilDriver(cache=PlanCache(), mode=MODE, padding="exact",
+                        autostart=False)
+    a, b = _grid(spec, (50,), rng), _grid(spec, (51,), rng)
+    assert drv.group_key(spec, a) != drv.group_key(spec, b)
+    assert drv.group_key(spec, a) == drv.group_key(spec, a)
+    drv.close()
+
+
+def test_submit_validates_ndim_and_halo(rng):
+    spec = make_stencil("star", 2, 1, seed=0)
+    with StencilDriver(cache=PlanCache(), mode=MODE) as drv:
+        with pytest.raises(ValueError, match="2-D"):
+            drv.submit(spec, jnp.zeros((8,)))
+        with pytest.raises(ValueError, match="halo"):
+            drv.submit(spec, jnp.zeros((2, 8)))
+
+
+# ---------------------------------------------------------------------------
+# padding policy round-trip vs per-job oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("padding", ["bucket", "max", "exact"])
+def test_padding_roundtrip_matches_per_job_oracle(padding, rng):
+    cache = PlanCache()
+    jobs = _mixed_jobs(18, rng)
+    with StencilDriver(cache=cache, mode=MODE, padding=padding,
+                       policy=BatchPolicy(max_batch=6, max_wait_ms=1.0)) as drv:
+        got = drv.map(jobs, timeout=120)
+    for (spec, x), y in zip(jobs, got):
+        want = tuned_apply(spec, x, cache=cache, mode=MODE)
+        assert y.shape == tuple(s - 2 * spec.radius for s in x.shape)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_acceptance_100_jobs_occupancy_and_correctness(rng):
+    """ISSUE 6 acceptance: >=100 jobs, >=3 specs, occupancy > 1, outputs
+    match per-job tuned_apply AND the direct oracle."""
+    cache = PlanCache()
+    jobs = _mixed_jobs(102, rng)
+    drv = StencilDriver(cache=cache, mode=MODE,
+                        policy=BatchPolicy(max_batch=16, max_wait_ms=2.0),
+                        autostart=False)
+    futures = [drv.submit(spec, x) for spec, x in jobs]
+    drv.start()
+    got = [f.result(timeout=300) for f in futures]
+    metrics = drv.metrics()
+    drv.close()
+
+    for (spec, x), y in zip(jobs, got):
+        tuned = tuned_apply(spec, x, cache=cache, mode=MODE)
+        direct = apply_stencil(spec, x, backend="direct")
+        # padding to the bucket shape changes the compiled program, so
+        # ulp-level reassociation vs the exact-shape run is possible —
+        # tolerance stays at float32-epsilon scale, not loose
+        np.testing.assert_allclose(np.asarray(y), np.asarray(tuned),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(direct),
+                                   rtol=2e-5, atol=2e-5)
+    overall = metrics["overall"]
+    assert overall["completed"] == len(jobs)
+    assert overall["batch_occupancy"] > 1.0
+    assert overall["batches"] < len(jobs)
+    assert metrics["tuner"]["plan_hit_rate"] > 0
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_and_metrics(rng):
+    spec = make_stencil("box", 1, 1, seed=5)
+    drv = StencilDriver(cache=PlanCache(), mode=MODE,
+                        policy=BatchPolicy(max_batch=8, max_queue=3,
+                                           overflow="reject"),
+                        autostart=False)
+    xs = [_grid(spec, (40,), rng) for _ in range(4)]
+    futures = [drv.submit(spec, x) for x in xs[:3]]
+    with pytest.raises(QueueFullError):
+        drv.submit(spec, xs[3])
+    key = drv.group_key(spec, xs[0])
+    assert drv.queue_depth() == 3 and drv.queue_depth(key) == 3
+    m = drv.metrics()["plans"][key]
+    assert m["rejected"] == 1 and m["submitted"] == 3
+    drv.start()
+    for f in futures:
+        f.result(timeout=60)
+    drv.close()
+
+
+def test_backpressure_block_completes(rng):
+    spec = make_stencil("box", 1, 1, seed=5)
+    with StencilDriver(cache=PlanCache(), mode=MODE,
+                       policy=BatchPolicy(max_batch=4, max_wait_ms=0.0,
+                                          max_queue=2,
+                                          overflow="block")) as drv:
+        xs = [_grid(spec, (40,), rng) for _ in range(10)]
+        got = drv.map([(spec, x) for x in xs], timeout=120)
+    assert len(got) == 10
+    want = apply_stencil(spec, xs[0], backend="direct")
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_counters_and_latency(rng):
+    spec = make_stencil("star", 2, 1, seed=0)
+    cache = PlanCache()
+    drv = StencilDriver(cache=cache, mode=MODE,
+                        policy=BatchPolicy(max_batch=4, max_wait_ms=1.0),
+                        autostart=False)
+    xs = [_grid(spec, (16, 18), rng) for _ in range(6)]
+    futures = [drv.submit(spec, x) for x in xs]
+    drv.start()
+    [f.result(timeout=120) for f in futures]
+    metrics = drv.metrics()
+    drv.close()
+
+    key = drv.group_key(spec, xs[0])
+    m = metrics["plans"][key]
+    assert m["submitted"] == 6 and m["completed"] == 6 and m["failed"] == 0
+    assert m["batches"] == 2 and m["batch_occupancy"] == 3.0
+    assert 0 < m["padding_efficiency"] <= 1.0
+    assert m["latency"]["count"] == 6
+    assert m["latency"]["p99_ms"] >= m["latency"]["p50_ms"] > 0
+    assert m["queue_depth"] == 0
+    # tuner stats ride along: one tune, then plan hits on later batches
+    assert metrics["tuner"]["tunes"] == 1
+    assert metrics["tuner"]["plan_hits"] >= 1
+
+
+def test_latency_window_percentiles():
+    w = LatencyWindow(maxlen=16)
+    for ms in [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]:
+        w.observe(ms / 1e3)
+    assert w.percentile(50) == pytest.approx(5e-3)
+    assert w.percentile(99) == pytest.approx(10e-3)
+    assert w.as_dict()["count"] == 10
+    assert LatencyWindow().as_dict()["p99_ms"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler semantics (traffic-class agnostic layer)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_packs_up_to_max_batch():
+    seen = []
+    sched = BatchScheduler(lambda key, ps: seen.append(list(ps)) or ps,
+                           BatchPolicy(max_batch=4, max_wait_ms=50.0),
+                           autostart=False)
+    futures = [sched.submit("k", i) for i in range(10)]
+    sched.start()
+    assert [f.result(timeout=30) for f in futures] == list(range(10))
+    sched.shutdown()
+    assert sorted(len(b) for b in seen) == [2, 4, 4]
+
+
+def test_scheduler_groups_by_key_and_preserves_order():
+    batches = {}
+    def run(key, ps):
+        batches.setdefault(key, []).extend(ps)
+        return ps
+    sched = BatchScheduler(run, BatchPolicy(max_batch=8, max_wait_ms=50.0),
+                           autostart=False)
+    futures = [sched.submit(i % 2, i) for i in range(8)]
+    sched.start()
+    [f.result(timeout=30) for f in futures]
+    sched.shutdown()
+    assert batches[0] == [0, 2, 4, 6] and batches[1] == [1, 3, 5, 7]
+
+
+def test_scheduler_executor_error_propagates_to_futures():
+    def boom(key, ps):
+        raise RuntimeError("executor exploded")
+    sched = BatchScheduler(boom, BatchPolicy(max_batch=2, max_wait_ms=0.0))
+    f = sched.submit("k", 1)
+    with pytest.raises(RuntimeError, match="executor exploded"):
+        f.result(timeout=30)
+    # one bad batch must not wedge the worker
+    ok = BatchScheduler(lambda k, ps: ps, BatchPolicy(max_wait_ms=0.0))
+    assert ok.submit("k", 7).result(timeout=30) == 7
+    ok.shutdown()
+    sched.shutdown()
+
+
+def test_scheduler_result_count_mismatch_is_an_error():
+    sched = BatchScheduler(lambda k, ps: ps[:-1],
+                           BatchPolicy(max_wait_ms=0.0))
+    f = sched.submit("k", 1)
+    with pytest.raises(RuntimeError, match="results"):
+        f.result(timeout=30)
+    sched.shutdown()
+
+
+def test_scheduler_shutdown_drains_then_rejects():
+    sched = BatchScheduler(lambda k, ps: ps,
+                           BatchPolicy(max_batch=64, max_wait_ms=10_000.0),
+                           autostart=False)
+    futures = [sched.submit("k", i) for i in range(3)]
+    sched.start()
+    sched.shutdown(wait=True)        # drains despite the huge max_wait
+    assert [f.result(timeout=1) for f in futures] == [0, 1, 2]
+    with pytest.raises(RuntimeError):
+        sched.submit("k", 99)
+
+
+def test_scheduler_drain_blocks_until_empty():
+    done = []
+    def slowish(key, ps):
+        time.sleep(0.05)
+        done.extend(ps)
+        return ps
+    sched = BatchScheduler(slowish,
+                           BatchPolicy(max_batch=2, max_wait_ms=10_000.0))
+    for i in range(4):
+        sched.submit("k", i)
+    sched.drain()
+    assert sorted(done) == [0, 1, 2, 3] and sched.queue_depth() == 0
+    sched.shutdown()
+
+
+def test_scheduler_blocking_submit_unblocks_from_worker():
+    release = threading.Event()
+    def gated(key, ps):
+        release.wait(5)
+        return ps
+    sched = BatchScheduler(gated, BatchPolicy(max_batch=1, max_wait_ms=0.0,
+                                              max_queue=1, overflow="block"))
+    f0 = sched.submit("k", 0)
+    results = []
+    t = threading.Thread(
+        target=lambda: results.append(sched.submit("k", 1).result(10)))
+    t.start()
+    time.sleep(0.05)
+    release.set()
+    t.join(10)
+    assert not t.is_alive() and f0.result(5) == 0 and results == [1]
+    sched.shutdown()
+
+
+def test_batch_policy_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchPolicy(max_batch=0)
+    with pytest.raises(ValueError, match="overflow"):
+        BatchPolicy(overflow="drop")
+    with pytest.raises(ValueError, match="max_queue"):
+        BatchPolicy(max_queue=0)
+
+
+# ---------------------------------------------------------------------------
+# LM decode traffic on the same scheduling layer
+# ---------------------------------------------------------------------------
+
+def test_generate_driver_shares_scheduler_semantics():
+    jax = pytest.importorskip("jax")
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+    from repro.serving import GenerateDriver
+    from repro.serving import engine as E
+
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+
+    drv = GenerateDriver(params, cfg, cache_len=16, autostart=False)
+    futures = [drv.submit(prompts[i], 4) for i in range(2)]
+    drv.start()
+    got = [f.result(timeout=300) for f in futures]
+    metrics = drv.metrics()
+    drv.close()
+
+    # both aligned requests packed into ONE position-aligned batch
+    assert metrics["overall"]["batches"] == 1
+    assert metrics["overall"]["batch_occupancy"] == 2.0
+    want, _ = E.generate(params, cfg, prompts, n_new=4, cache_len=16)
+    np.testing.assert_array_equal(np.asarray(jnp.stack(got)),
+                                  np.asarray(want))
+    # misaligned prompt lengths land in different groups
+    drv2 = GenerateDriver(params, cfg, cache_len=16, autostart=False)
+    k1 = drv2.group_key(prompts[0], 4)
+    k2 = drv2.group_key(prompts[0][:5], 4)
+    assert k1 != k2
+    with pytest.raises(ValueError, match="1-D"):
+        drv2.submit(prompts, 4)
+    drv2.close()

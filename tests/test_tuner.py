@@ -190,6 +190,42 @@ def test_batched_matches_per_instance(rng):
                                    rtol=2e-5, atol=2e-5)
 
 
+def test_batched_accepts_sequence_of_same_shape_jobs(rng):
+    spec = make_stencil("box", 1, 1, seed=9)
+    xs = [jnp.asarray(rng.normal(size=(50,)), jnp.float32) for _ in range(3)]
+    cache = PlanCache()
+    got = tuned_apply_batched(spec, xs, cache=cache, mode="cost")
+    want = tuned_apply_batched(spec, jnp.stack(xs), cache=cache, mode="cost")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_rejects_mismatched_shapes(rng):
+    """The old behavior silently assumed one shape; now the error names
+    the offending jobs and their shapes."""
+    spec = make_stencil("star", 2, 1, seed=7)
+    xs = [jnp.zeros((34, 34)), jnp.zeros((34, 34)), jnp.zeros((36, 34))]
+    with pytest.raises(ValueError) as ei:
+        tuned_apply_batched(spec, xs, cache=PlanCache(), mode="cost")
+    msg = str(ei.value)
+    assert "(34, 34)" in msg and "(36, 34)" in msg and "job 2" in msg
+
+
+def test_batched_rejects_mismatched_dtypes_and_bad_rank(rng):
+    spec = make_stencil("star", 2, 1, seed=7)
+    cache = PlanCache()
+    xs = [jnp.zeros((34, 34), jnp.float32), jnp.zeros((34, 34), jnp.bfloat16)]
+    with pytest.raises(ValueError, match="dtype"):
+        tuned_apply_batched(spec, xs, cache=cache, mode="cost")
+    with pytest.raises(ValueError, match="empty"):
+        tuned_apply_batched(spec, [], cache=cache, mode="cost")
+    with pytest.raises(ValueError, match="B, \\*spatial"):
+        tuned_apply_batched(spec, jnp.zeros((34, 34)), cache=cache,
+                            mode="cost")
+    with pytest.raises(ValueError, match="halo"):
+        tuned_apply_batched(spec, jnp.zeros((4, 2, 34)), cache=cache,
+                            mode="cost")
+
+
 def test_batched_reuses_compiled_program(rng):
     spec = make_stencil("box", 1, 1, seed=9)
     xs = jnp.asarray(rng.normal(size=(4, 66)), jnp.float32)
