@@ -22,7 +22,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import analysis
 from repro.core.engine import StencilEngine
 from repro.core.stencil import PAPER_SUITE, make_stencil
 

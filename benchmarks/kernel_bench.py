@@ -2,10 +2,20 @@
 SpMM level (what §3.4's kernel engineering targets), CPU wall-clock.
 
 Measures the jnp (XLA-compiled) forms — the Pallas kernels are validated in
-interpret mode (correctness harness) and are not timed here.
+interpret mode (correctness harness) and are not timed here.  Records the
+results as a **versioned JSON artifact** (``BENCH_kernels.json``) mirroring
+``serving_bench.py``'s ``BENCH_serving.json``: per-radius dense-GEMM vs
+compressed 2:4 SpMM time and useful-MAC throughput, plus the end-to-end
+tuned-vs-default engine comparison per stencil.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernels.json
+    PYTHONPATH=src python benchmarks/kernel_bench.py --quick   # CI profile
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
 
 import jax
@@ -15,6 +25,9 @@ import numpy as np
 from repro.core.sparsify import sparsify_stencil_kernel
 from repro.core.sptc import sptc_matmul
 from repro.core.transform import kernel_matrix
+
+SCHEMA = "repro/bench_kernels"
+VERSION = 1
 
 
 def bench(fn, *args, iters=20):
@@ -27,36 +40,11 @@ def bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def tuned_stencil_bench():
-    """End-to-end: default direct engine vs the tuner's measured plan."""
-    from repro.core.stencil import make_stencil
-    from repro.tuner import PlanCache, plan_for
-    from repro.tuner.plan import Plan
-    from repro.tuner.search import measure
-
-    print()
-    print("# end-to-end stencil: default direct engine vs repro.tuner plan")
-    print("stencil,plan,default_us,tuned_us,speedup")
-    cache = PlanCache()
-    rng = np.random.default_rng(1)
-    n = 256
-    for shape, ndim, r in (("star", 2, 1), ("box", 2, 2), ("box", 2, 3)):
-        spec = make_stencil(shape, ndim, r, seed=9)
-        x = jnp.asarray(rng.normal(size=(n + 2 * r, n + 2 * r)), jnp.float32)
-        plan = plan_for(spec, x.shape, x.dtype, cache=cache, iters=5)
-        td = measure(cache.engine(spec, Plan.default(spec)), x, iters=10)
-        tt = measure(cache.engine(spec, plan), x, iters=10)
-        print(f"{spec.name},{plan.describe()},{td*1e6:.1f},{tt*1e6:.1f},"
-              f"{td/tt:.2f}x")
-    print(f"# tuner cache: {cache.stats.as_dict()}")
-
-
-def main():
-    print("# kernel microbench: dense padded GEMM vs compressed 2:4 SpMM")
-    print("radius,L,n,dense_us,sptc_us,dense_gmacs,sptc_gmacs")
-    rng = np.random.default_rng(0)
-    n = 1 << 14
-    for r in (1, 2, 3, 5, 7):
+def spmm_sweep(radii, n, iters, seed=0):
+    """Per-radius dense padded GEMM vs compressed 2:4 SpMM rows."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for r in radii:
         w = rng.normal(size=2 * r + 1)
         sk = sparsify_stencil_kernel(w)
         L = sk.L
@@ -68,14 +56,106 @@ def main():
 
         dense = jax.jit(lambda K, x: K @ x)
         sptc = jax.jit(sptc_matmul)
-        td = bench(dense, K, x)
-        ts = bench(sptc, vals, meta, xp)
+        td = bench(dense, K, x, iters=iters)
+        ts = bench(sptc, vals, meta, xp, iters=iters)
         dmacs = L * 2 * L * n
         smacs = L * L * n
-        print(f"{r},{L},{n},{td*1e6:.1f},{ts*1e6:.1f},"
-              f"{dmacs/td/1e9:.2f},{smacs/ts/1e9:.2f}")
+        rows.append({
+            "radius": r, "L": L, "n": n,
+            "dense_us": round(td * 1e6, 1),
+            "sptc_us": round(ts * 1e6, 1),
+            "dense_gmacs": round(dmacs / td / 1e9, 2),
+            "sptc_gmacs": round(smacs / ts / 1e9, 2),
+        })
+    return rows
+
+
+def tuned_stencil_sweep(points, n, iters, seed=1):
+    """End-to-end: default direct engine vs the tuner's measured plan."""
+    from repro.core.stencil import make_stencil
+    from repro.tuner import PlanCache, plan_for
+    from repro.tuner.plan import Plan
+    from repro.tuner.search import measure
+
+    cache = PlanCache()
+    rng = np.random.default_rng(seed)
+    rows = []
+    for shape, ndim, r in points:
+        spec = make_stencil(shape, ndim, r, seed=9)
+        x = jnp.asarray(rng.normal(size=(n + 2 * r, n + 2 * r)), jnp.float32)
+        plan = plan_for(spec, x.shape, x.dtype, cache=cache, iters=iters)
+        td = measure(cache.engine(spec, Plan.default(spec)), x, iters=2 * iters)
+        tt = measure(cache.engine(spec, plan), x, iters=2 * iters)
+        rows.append({
+            "stencil": spec.name, "plan": plan.describe(),
+            "default_us": round(td * 1e6, 1),
+            "tuned_us": round(tt * 1e6, 1),
+            "speedup": round(td / tt, 2),
+        })
+    return rows, cache.stats.as_dict()
+
+
+def run(radii=(1, 2, 3, 5, 7), n=1 << 14, iters=20, tuned_n=256,
+        tuned_iters=5, seed=0, out=None):
+    spmm = spmm_sweep(radii, n, iters, seed=seed)
+    tuned, tuner_stats = tuned_stencil_sweep(
+        (("star", 2, 1), ("box", 2, 2), ("box", 2, 3)),
+        tuned_n, tuned_iters)
+    payload = {
+        "schema": SCHEMA,
+        "version": VERSION,
+        "generated_unix": round(time.time(), 1),
+        "env": {"backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "python": platform.python_version(),
+                "jax": jax.__version__},
+        "config": {"radii": list(radii), "n": n, "iters": iters,
+                   "tuned_n": tuned_n, "tuned_iters": tuned_iters,
+                   "seed": seed},
+        "spmm": spmm,
+        "tuned_vs_default": tuned,
+        "tuner": tuner_stats,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=None,
+                    help="SpMM columns (default: 16384, 2048 in --quick)")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI profile (fewer columns/iters/radii)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+
+    radii = (1, 2, 3) if args.quick else (1, 2, 3, 5, 7)
+    n = args.n or (1 << 11 if args.quick else 1 << 14)
+    iters = args.iters or (5 if args.quick else 20)
+    tuned_n = 64 if args.quick else 256
+    payload = run(radii=radii, n=n, iters=iters, tuned_n=tuned_n,
+                  tuned_iters=3 if args.quick else 5, out=args.out)
+
+    print("# kernel microbench: dense padded GEMM vs compressed 2:4 SpMM")
+    print("radius,L,n,dense_us,sptc_us,dense_gmacs,sptc_gmacs")
+    for row in payload["spmm"]:
+        print(f"{row['radius']},{row['L']},{row['n']},{row['dense_us']},"
+              f"{row['sptc_us']},{row['dense_gmacs']},{row['sptc_gmacs']}")
     print("# sptc executes K/2 — per-useful-MAC throughput is the metric")
-    tuned_stencil_bench()
+    print()
+    print("# end-to-end stencil: default direct engine vs repro.tuner plan")
+    print("stencil,plan,default_us,tuned_us,speedup")
+    for row in payload["tuned_vs_default"]:
+        print(f"{row['stencil']},{row['plan']},{row['default_us']},"
+              f"{row['tuned_us']},{row['speedup']}x")
+    print(f"# tuner cache: {payload['tuner']}")
+    if args.out:
+        print(f"# artifact written to {args.out}")
+    return payload
 
 
 if __name__ == "__main__":

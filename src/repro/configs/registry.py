@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import (ModelConfig, ShapeCell, SHAPE_CELLS,
-                                SHAPE_BY_NAME, cell_applicable)
+                                cell_applicable)
 
 _MODULES: Dict[str, str] = {
     "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",

@@ -43,7 +43,7 @@ class Cost:
     input_access: float   # input elements loaded per output point
     param_access: float   # stencil parameters loaded per output point
 
-    def as_tuple(self):
+    def as_tuple(self) -> tuple:
         return (self.macs, self.input_access, self.param_access)
 
 

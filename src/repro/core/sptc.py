@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def sptc_matmul(values, meta, x):
+def sptc_matmul(values: jnp.ndarray, meta: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
     """Compressed 2:4 SpMM: (M, K/2) x metadata x (K, N) -> (M, N).
 
     values: (M, K/2) float; meta: (M, K/2) int in [0,4); x: (K, N).
@@ -32,7 +33,8 @@ def sptc_matmul(values, meta, x):
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def sptc_matmul_dense_equiv(values, meta, k):
+def sptc_matmul_dense_equiv(values: jnp.ndarray, meta: jnp.ndarray,
+                            k: int) -> jnp.ndarray:
     """Decompress (values, meta) to the dense (M, K) permuted matrix (jnp)."""
     m, half = values.shape
     seg = (jnp.arange(half) // 2) * 4
@@ -42,7 +44,7 @@ def sptc_matmul_dense_equiv(values, meta, k):
     return out.at[rows, gather].add(values)
 
 
-def swap_rows(x, perm):
+def swap_rows(x: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
     """Zero-cost row swap (paper §3.3) — reference form.
 
     Column-permuting the LHS by ``perm`` requires row-permuting the RHS by the

@@ -31,7 +31,7 @@ class StencilSpec:
     radius: int
     weights: np.ndarray
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.shape not in SHAPES:
             raise ValueError(f"shape must be one of {SHAPES}, got {self.shape}")
         if self.ndim not in (1, 2, 3):

@@ -14,7 +14,6 @@ import os
 from typing import Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.stencil import StencilSpec

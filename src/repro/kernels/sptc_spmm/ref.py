@@ -1,8 +1,6 @@
 """Pure-jnp oracle for the 2:4 compressed SpMM (simulated SpTC semantics)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core.sptc import sptc_matmul
 
 

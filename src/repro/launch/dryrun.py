@@ -20,16 +20,16 @@ import jax.numpy as jnp                                          # noqa: E402
 import numpy as np                                               # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P      # noqa: E402
 
-from repro.configs.base import SHAPE_BY_NAME, ShapeCell          # noqa: E402
+from repro.configs.base import ShapeCell                         # noqa: E402
 from repro.configs.registry import (ARCHS, get_config,           # noqa: E402
                                     input_specs, iter_cells)
-from repro.distributed.sharding import (default_rules, sp_rules,  # noqa: E402
+from repro.distributed.sharding import (default_rules,           # noqa: E402
                                         param_shardings, spec_for,
                                         use_mesh_rules)
 from repro.launch.mesh import make_production_mesh               # noqa: E402
 from repro.models import model as M                              # noqa: E402
 from repro.models.nn import axes_tree                            # noqa: E402
-from repro.roofline.analysis import (Roofline, from_compiled,    # noqa: E402
+from repro.roofline.analysis import (from_compiled,              # noqa: E402
                                      model_flops_for_cell)
 from repro.serving import engine as E                            # noqa: E402
 from repro.training import optimizer as O                        # noqa: E402

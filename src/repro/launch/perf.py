@@ -16,10 +16,8 @@ import argparse                                                  # noqa: E402
 import json                                                      # noqa: E402
 from typing import Any, Dict, Optional                           # noqa: E402
 
-from repro.configs.base import SHAPE_BY_NAME                     # noqa: E402
 from repro.configs.registry import get_config                    # noqa: E402
-from repro.distributed.sharding import (ShardingRules,           # noqa: E402
-                                        default_rules, sp_rules)
+from repro.distributed.sharding import sp_rules                  # noqa: E402
 from repro.launch.dryrun import lower_cell                       # noqa: E402
 from repro.training.train_step import TrainConfig                # noqa: E402
 

@@ -14,8 +14,6 @@ import time
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_config

@@ -9,7 +9,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

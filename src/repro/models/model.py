@@ -24,12 +24,10 @@ a no-op outside a mesh context (smoke tests), binding inside dryrun/train.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain

@@ -10,7 +10,6 @@ Init functions run under ``jax.eval_shape`` for the dry-run — no allocation.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, Tuple
 
 import jax

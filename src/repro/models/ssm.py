@@ -16,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.nn import ParamBuilder
-from repro.models import layers as L
 
 
 def init_mamba(pb: ParamBuilder, cfg: ModelConfig):

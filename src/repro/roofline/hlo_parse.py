@@ -21,7 +21,6 @@ Everything is per-DEVICE (the partitioned module is the per-device program).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 
@@ -38,7 +37,7 @@ COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
 _INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
 _SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _OPERANDS = re.compile(r"%([\w.\-]+)")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
@@ -46,6 +45,8 @@ _CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
 _COND = re.compile(r"condition=%?([\w.\-]+)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+_SOURCE = re.compile(r'source_file="([^"]+)"(?:\s+source_line=(\d+))?')
 
 
 def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
@@ -86,6 +87,10 @@ class Computation:
     name: str
     instrs: List[Instr]
     types: Dict[str, str]                 # result name -> type str
+    root: Optional[str] = None            # ROOT instruction name
+
+    def index(self) -> Dict[str, Instr]:
+        return {i.name: i for i in self.instrs}
 
 
 def parse_module(text: str) -> Dict[str, Computation]:
@@ -105,13 +110,40 @@ def parse_module(text: str) -> Dict[str, Computation]:
             continue
         m = _INSTR.match(line)
         if m:
-            name, type_str, opcode = m.groups()
+            is_root, name, type_str, opcode = m.groups()
             cur.instrs.append(Instr(name, type_str, opcode, stripped))
             cur.types[name] = type_str
+            if is_root:
+                cur.root = name
         elif "=" not in stripped and stripped.startswith("%"):
             # computation parameter declaration lines (rare in this format)
             pass
+    for comp in comps.values():
+        if comp.root is None and comp.instrs:
+            comp.root = comp.instrs[-1].name
     return comps
+
+
+def find_entry(text: str, comps: Dict[str, Computation]) -> Optional[str]:
+    """Name of the ENTRY computation (largest computation as fallback)."""
+    for raw in text.splitlines():
+        s = raw.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HDR.match(s)
+            if m:
+                return m.group(2)
+            break
+    if comps:
+        return max(comps, key=lambda c: len(comps[c].instrs))
+    return None
+
+
+def source_location(line: str) -> Optional[Tuple[str, int]]:
+    """(source_file, source_line) from an instruction's metadata, if any."""
+    m = _SOURCE.search(line)
+    if not m:
+        return None
+    return m.group(1), int(m.group(2) or 0)
 
 
 @dataclasses.dataclass
@@ -134,7 +166,7 @@ class Totals:
         return sum(self.coll_bytes.values())
 
 
-def _operand_names(line: str, opcode: str) -> List[str]:
+def operand_names(line: str, opcode: str) -> List[str]:
     """Operand instruction names inside the opcode's parens."""
     start = line.find(opcode + "(")
     if start < 0:
@@ -197,7 +229,7 @@ def analyze(text: str) -> Totals:
                     out_elems *= d
                 cdims = _LHS_CDIMS.search(ins.line)
                 contract = 1
-                ops = _operand_names(ins.line, "dot")
+                ops = operand_names(ins.line, "dot")
                 if cdims and ops:
                     lhs_t = _resolve_type(ops[0], comp, comps)
                     if lhs_t:
@@ -219,7 +251,7 @@ def analyze(text: str) -> Totals:
                 nbytes = _shape_elems_bytes(ins.type_str)[1]
                 if base == "reduce-scatter":
                     onb = 0
-                    for o in _operand_names(ins.line, op):
+                    for o in operand_names(ins.line, op):
                         t = _resolve_type(o, comp, comps)
                         if t:
                             onb += _shape_elems_bytes(t)[1]
@@ -245,3 +277,122 @@ def analyze(text: str) -> Totals:
 
     visit(entry, 1.0)
     return totals
+
+
+# ---------------------------------------------------------------------------
+# Hot-path extraction (used by repro.vet's lowering analyzer)
+# ---------------------------------------------------------------------------
+
+DOT_OPS = ("dot", "convolution")
+_CALL_LIKE = ("fusion", "call", "custom-call", "conditional", "map",
+              "reduce", "reduce-window", "scatter", "select-and-scatter")
+
+
+def opcode_histogram(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """Opcode -> count over every computation of a parsed module."""
+    hist: Dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            hist[ins.opcode] = hist.get(ins.opcode, 0) + 1
+    return dict(sorted(hist.items()))
+
+
+class _Frame:
+    """Binds one computation's parameters to the calling frame's operands."""
+
+    __slots__ = ("comp", "params", "parent")
+
+    def __init__(self, comp: Computation,
+                 params: Optional[List[str]] = None,
+                 parent: Optional["_Frame"] = None):
+        self.comp = comp
+        self.params = params
+        self.parent = parent
+
+
+@dataclasses.dataclass
+class HotPathReport:
+    """Every dot of a module plus the instructions feeding its operands.
+
+    ``feeding`` is the union (dedup'd by (computation, name)) of the
+    backward operand closures of all dots — parameter hops cross fusion
+    and call boundaries, ``while`` bodies are included whole (a sound
+    over-approximation).  ``histogram()`` is what the zero-overhead
+    verdict consumes: how many gather/transpose/copy/... ops the matmul
+    hot path actually contains in the optimized program.
+    """
+
+    dots: List[Tuple[str, Instr]]
+    feeding: List[Tuple[str, Instr]]
+
+    def histogram(self) -> Dict[str, int]:
+        hist: Dict[str, int] = {}
+        for _, ins in self.feeding:
+            hist[ins.opcode] = hist.get(ins.opcode, 0) + 1
+        return dict(sorted(hist.items()))
+
+    def feeding_of(self, *opcodes: str) -> List[Tuple[str, Instr]]:
+        return [(c, i) for c, i in self.feeding if i.opcode in opcodes]
+
+
+def hot_path(text: str) -> HotPathReport:
+    """Backward operand closure of every dot reachable from ENTRY."""
+    comps = parse_module(text)
+    entry = find_entry(text, comps)
+    dots: List[Tuple[str, Instr]] = []
+    feeding: Dict[Tuple[str, str], Tuple[str, Instr]] = {}
+
+    def closure(frame: _Frame, start: List[str]) -> None:
+        work: List[Tuple[_Frame, str]] = [(frame, n) for n in start]
+        seen = set()
+        while work:
+            fr, name = work.pop()
+            if (fr.comp.name, name) in seen:
+                continue
+            seen.add((fr.comp.name, name))
+            ins = fr.comp.index().get(name)
+            if ins is None:
+                continue
+            if ins.opcode == "parameter":
+                m = _PARAM_IDX.search(ins.line)
+                if m and fr.params is not None and fr.parent is not None:
+                    k = int(m.group(1))
+                    if k < len(fr.params):
+                        work.append((fr.parent, fr.params[k]))
+                continue
+            feeding.setdefault((fr.comp.name, name), (fr.comp.name, ins))
+            for target in _CALLS.findall(ins.line) + _COND.findall(ins.line):
+                if target in comps:
+                    child = _Frame(comps[target],
+                                   operand_names(ins.line, ins.opcode), fr)
+                    if ins.opcode == "while":
+                        # loop state flows through every body instruction
+                        work.extend((child, i.name)
+                                    for i in comps[target].instrs)
+                    elif comps[target].root is not None:
+                        work.append((child, comps[target].root))
+            for o in operand_names(ins.line, ins.opcode):
+                work.append((fr, o))
+
+    def visit(frame: _Frame, path: Tuple[str, ...]) -> None:
+        if frame.comp.name in path:
+            return
+        path = path + (frame.comp.name,)
+        for ins in frame.comp.instrs:
+            if ins.opcode in DOT_OPS:
+                dots.append((frame.comp.name, ins))
+                closure(frame, operand_names(ins.line, ins.opcode))
+            elif ins.opcode in _CALL_LIKE or ins.opcode == "while":
+                for target in (_CALLS.findall(ins.line)
+                               + _COND.findall(ins.line)):
+                    if target in comps:
+                        visit(_Frame(comps[target],
+                                     operand_names(ins.line, ins.opcode),
+                                     frame), path)
+
+    if entry is not None and entry in comps:
+        visit(_Frame(comps[entry]), ())
+    # the dots themselves are not "feeding" instructions
+    for cname, ins in dots:
+        feeding.pop((cname, ins.name), None)
+    return HotPathReport(dots=dots, feeding=list(feeding.values()))

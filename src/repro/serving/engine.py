@@ -12,7 +12,6 @@ batching driver (`serving/lm_driver.py`, on the shared
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

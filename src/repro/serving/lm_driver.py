@@ -77,9 +77,9 @@ class GenerateDriver:
         try:
             fut = self._sched.submit(key, _GenJob(prompt, memory))
         except QueueFullError:
-            m.rejected += 1
+            m.bump(rejected=1)
             raise
-        m.submitted += 1
+        m.bump(submitted=1)
         return fut
 
     # -- lifecycle / introspection -------------------------------------------
@@ -134,15 +134,13 @@ class GenerateDriver:
                                  cache_len, memory=memory,
                                  greedy=self.greedy)
         except BaseException:
-            m.failed += len(jobs)
+            m.bump(failed=len(jobs))
             raise
         toks.block_until_ready()
         now = time.monotonic()
-        m.batches += 1
-        m.batched_jobs += len(jobs)
-        m.completed += len(jobs)
-        m.payload_elems += len(jobs) * (prompt_len + n_new)
-        m.padded_elems += len(jobs) * (prompt_len + n_new)
+        m.bump(batches=1, batched_jobs=len(jobs), completed=len(jobs),
+               payload_elems=len(jobs) * (prompt_len + n_new),
+               padded_elems=len(jobs) * (prompt_len + n_new))
         for j in jobs:
-            m.latency.observe(now - j.t_submit)
+            m.observe_latency(now - j.t_submit)
         return [toks[i] for i in range(len(jobs))]

@@ -110,9 +110,9 @@ class StencilDriver:
         try:
             fut = self._sched.submit(key, _StencilJob(x))
         except QueueFullError:
-            m.rejected += 1
+            m.bump(rejected=1)
             raise
-        m.submitted += 1
+        m.bump(submitted=1)
         return fut
 
     def map(self, jobs: Iterable[Tuple[StencilSpec, "jnp.ndarray"]],
@@ -183,7 +183,7 @@ class StencilDriver:
             ys = tuned_apply_batched(spec, xs, cache=self.cache,
                                      mode=self.mode)
         except BaseException:
-            m.failed += len(jobs)
+            m.bump(failed=len(jobs))
             raise
         r = spec.radius
         results = []
@@ -193,11 +193,9 @@ class StencilDriver:
         if results:
             results[-1].block_until_ready()
         now = time.monotonic()
-        m.batches += 1
-        m.batched_jobs += len(jobs)
-        m.completed += len(jobs)
-        m.payload_elems += int(sum(int(np.prod(s)) for s in shapes))
-        m.padded_elems += int(np.prod(target)) * len(jobs)
+        m.bump(batches=1, batched_jobs=len(jobs), completed=len(jobs),
+               payload_elems=int(sum(int(np.prod(s)) for s in shapes)),
+               padded_elems=int(np.prod(target)) * len(jobs))
         for j in jobs:
-            m.latency.observe(now - j.t_submit)
+            m.observe_latency(now - j.t_submit)
         return results

@@ -11,7 +11,7 @@ timing is undesirable (CI, dry-runs).
 from __future__ import annotations
 
 import os
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax.numpy as jnp
 
@@ -28,7 +28,8 @@ def _resolve_mode(mode: str | None) -> str:
     return mode or os.environ.get(MODE_ENV_VAR, "time")
 
 
-def plan_for(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
+def plan_for(spec: StencilSpec, shape: Sequence[int],
+             dtype: Any = jnp.float32, *,
              cache: PlanCache | None = None, mode: str | None = None,
              warmup: int = 1, iters: int = 3) -> Plan:
     """The cached plan for (spec, halo-inclusive shape, dtype); tunes on miss."""
@@ -49,7 +50,8 @@ def plan_for(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
     return plan
 
 
-def tuned_engine(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
+def tuned_engine(spec: StencilSpec, shape: Sequence[int],
+                 dtype: Any = jnp.float32, *,
                  cache: PlanCache | None = None, mode: str | None = None,
                  warmup: int = 1, iters: int = 3) -> StencilEngine:
     """Compiled engine for the tuned plan (shared jit cache across calls)."""
@@ -59,15 +61,17 @@ def tuned_engine(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
     return cache.engine(spec, plan)
 
 
-def tuned_apply(spec: StencilSpec, x, *, cache: PlanCache | None = None,
-                mode: str | None = None, warmup: int = 1, iters: int = 3):
+def tuned_apply(spec: StencilSpec, x: jnp.ndarray, *,
+                cache: PlanCache | None = None,
+                mode: str | None = None, warmup: int = 1,
+                iters: int = 3) -> jnp.ndarray:
     """Apply ``spec`` to ``x`` (halo included) through the tuned plan."""
     eng = tuned_engine(spec, x.shape, x.dtype, cache=cache, mode=mode,
                        warmup=warmup, iters=iters)
     return eng(x)
 
 
-def _validate_batch(spec: StencilSpec, xs):
+def _validate_batch(spec: StencilSpec, xs: Any) -> jnp.ndarray:
     """Normalize ``xs`` to one stacked (B, *spatial) array, loudly.
 
     Accepts a pre-stacked array or a sequence of per-job arrays.  Every
@@ -106,10 +110,10 @@ def _validate_batch(spec: StencilSpec, xs):
     return xs
 
 
-def tuned_apply_batched(spec: StencilSpec, xs, *,
+def tuned_apply_batched(spec: StencilSpec, xs: Any, *,
                         cache: PlanCache | None = None,
                         mode: str | None = None,
-                        warmup: int = 1, iters: int = 3):
+                        warmup: int = 1, iters: int = 3) -> jnp.ndarray:
     """Apply ``spec`` to a batch ``xs`` of shape (B, *spatial-with-halo).
 
     ``xs`` may also be a sequence of same-shape per-job arrays (it is
@@ -124,7 +128,7 @@ def tuned_apply_batched(spec: StencilSpec, xs, *,
     return cache.batched(spec, plan)(xs)
 
 
-def batch_group_key(spec: StencilSpec, shape: Sequence[int], dtype,
+def batch_group_key(spec: StencilSpec, shape: Sequence[int], dtype: Any,
                     device: str | None = None) -> str:
     """Stable string key a serving driver buckets batchable jobs by.
 

@@ -62,7 +62,7 @@ class CacheStats:
 class PlanCache:
     """In-memory plan + executable cache, optionally backed by a JSON file."""
 
-    def __init__(self, path: str | os.PathLike | None = None):
+    def __init__(self, path: str | os.PathLike | None = None) -> None:
         self.path: Optional[Path] = Path(path).expanduser() if path else None
         self.stats = CacheStats()
         self._plans: Dict[str, Plan] = {}
@@ -108,7 +108,8 @@ class PlanCache:
         fp = spec_fingerprint(spec)
         return frozenset(p for f, p in self._engines if f == fp)
 
-    def prune_engines(self, spec: StencilSpec, keep) -> int:
+    def prune_engines(self, spec: StencilSpec,
+                      keep: "frozenset[Plan] | set[Plan]") -> int:
         """Drop cached engines for ``spec`` whose plan is not in ``keep``.
 
         Used after a timed tune: losing candidates' jitted executables

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +67,7 @@ def shape_bucket(shape: Tuple[int, ...]) -> Tuple[int, ...]:
     return tuple(1 << max(0, int(np.ceil(np.log2(max(1, s))))) for s in shape)
 
 
-def dtype_name(dtype) -> str:
+def dtype_name(dtype: Any) -> str:
     return jnp.dtype(dtype).name
 
 
@@ -98,7 +98,7 @@ class PlanKey:
                    dtype=parts["dtype"], device=parts["dev"])
 
 
-def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype,
+def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype: Any,
              device: str | None = None) -> PlanKey:
     return PlanKey(spec_fp=spec_fingerprint(spec),
                    bucket=shape_bucket(tuple(shape)),

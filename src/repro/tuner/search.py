@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Sequence, Tuple
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,14 +117,15 @@ class TuneResult:
                    if c.error is None and c.plan == self.plan)
 
 
-def _default_engine_factory(spec: StencilSpec, plan: Plan):
+def _default_engine_factory(spec: StencilSpec, plan: Plan) -> "StencilEngine":
     from repro.core.engine import StencilEngine
     return StencilEngine(spec, backend=plan.backend, L=plan.L,
                          star_fast_path=plan.star_fast_path,
                          fuse_rows=plan.fuse_rows)
 
 
-def measure(fn: Callable, x, warmup: int = 1, iters: int = 3) -> float:
+def measure(fn: Callable, x: jnp.ndarray, warmup: int = 1,
+            iters: int = 3) -> float:
     """Median wall-clock seconds per call; warmup absorbs the jit compile."""
     for _ in range(max(1, warmup)):
         jax.block_until_ready(fn(x))
@@ -136,7 +137,8 @@ def measure(fn: Callable, x, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts))
 
 
-def autotune(spec: StencilSpec, shape: Sequence[int], dtype=jnp.float32, *,
+def autotune(spec: StencilSpec, shape: Sequence[int],
+             dtype: Any = jnp.float32, *,
              mode: str = "time",
              engine_factory: Callable | None = None,
              warmup: int = 1, iters: int = 3, seed: int = 0) -> TuneResult:

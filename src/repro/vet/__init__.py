@@ -1,0 +1,20 @@
+"""repro.vet — ahead-of-time verifier for the SPIDER reproduction.
+
+Three analyzers over one findings/baseline/CLI spine:
+
+* :mod:`repro.vet.invariants` — transform-pipeline algebra (bandedness,
+  involution, 2:4 pattern, metadata, gather ranges) on pure NumPy;
+* :mod:`repro.vet.lowering` — lowered-HLO purity of the tuned engines
+  (dot counts, hot-path gather/copy budget, sparse-vs-dense parity,
+  retrace count) certifying the paper's zero-runtime-overhead claim;
+* :mod:`repro.vet.code` — AST lint for serving/tuner hot paths
+  (per-request jit, host syncs, lock discipline, nondeterministic keys).
+
+Run with ``python -m repro.vet [paths]``.
+"""
+from repro.vet.baseline import Baseline, BaselineEntry
+from repro.vet.config import VetConfig, load_config
+from repro.vet.findings import Finding
+
+__all__ = ["Baseline", "BaselineEntry", "Finding", "VetConfig",
+           "load_config"]

@@ -1,0 +1,155 @@
+"""``python -m repro.vet`` — run the analyzers, print findings, gate CI.
+
+    python -m repro.vet src/repro                 # all three analyzers
+    python -m repro.vet --analyzers code src      # subset
+    python -m repro.vet src/repro --json          # machine-readable
+    python -m repro.vet src/repro --write-baseline
+
+Exit status: 0 when no *error* finding survives the baseline, 1 when at
+least one does, 2 on usage errors.  Warnings and infos never fail the
+run; suppressed findings and unused baseline entries are reported so the
+baseline stays honest.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.vet.baseline import Baseline
+from repro.vet.config import VetConfig, load_config
+from repro.vet.findings import Finding, counts_by_severity
+
+ANALYZERS = ("invariants", "lowering", "code")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.vet",
+        description="Ahead-of-time verifier: SPIDER transform invariants, "
+                    "lowered-HLO purity, and hot-path/concurrency lint.")
+    p.add_argument("paths", nargs="*", default=[],
+                   help="files/directories for the code analyzer "
+                        "(default: src/repro under the config root)")
+    p.add_argument("--analyzers", default=",".join(ANALYZERS),
+                   help="comma-separated subset of: " + ", ".join(ANALYZERS))
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit a JSON report instead of text")
+    p.add_argument("--baseline", default=None,
+                   help="baseline file (default: [tool.repro-vet].baseline)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline entirely")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline from current findings "
+                        "(preserves reasons of kept entries) and exit 0")
+    p.add_argument("--root", default=None,
+                   help="repo root for relative paths (default: pyproject "
+                        "directory)")
+    return p
+
+
+def run_analyzers(cfg: VetConfig, which: List[str], paths: List[Path]
+                  ) -> tuple[List[Finding], Optional[Dict[str, dict]]]:
+    findings: List[Finding] = []
+    verdict: Optional[Dict[str, dict]] = None
+    if "invariants" in which:
+        from repro.vet import invariants
+        findings += invariants.run(cfg)
+    if "lowering" in which:
+        from repro.vet import lowering
+        fs, verdict = lowering.run(cfg)
+        findings += fs
+    if "code" in which:
+        from repro.vet import code
+        findings += code.run(cfg, paths)
+    return findings, verdict
+
+
+def _print_text(new: List[Finding], suppressed: List[Finding],
+                unused, verdict: Optional[Dict[str, dict]],
+                out=None) -> None:
+    out = out if out is not None else sys.stdout
+    for f in new:
+        print(f.format(), file=out)
+    if verdict:
+        print("zero-overhead verdict:", file=out)
+        for kernel in sorted(verdict):
+            v = verdict[kernel]
+            status = "certified" if v.get("certified") else "NOT certified"
+            traces = v.get("traces")
+            extra = f", traces={traces}" if traces is not None else ""
+            print(f"  {kernel}: {status}{extra}", file=out)
+            for probe in sorted(v.get("probes", {})):
+                counts = v["probes"][probe]
+                ops = " ".join(f"{k}={counts[k]}" for k in sorted(counts))
+                print(f"    {probe}: {ops}", file=out)
+    if suppressed:
+        print(f"{len(suppressed)} finding(s) suppressed by baseline",
+              file=out)
+    for e in unused:
+        print(f"warning: unused baseline entry {e.key()!r} — remove it",
+              file=out)
+    counts = counts_by_severity(new)
+    print(f"vet: {counts['error']} error(s), {counts['warning']} "
+          f"warning(s), {counts['info']} info(s)", file=out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    which = [a.strip() for a in args.analyzers.split(",") if a.strip()]
+    bad = [a for a in which if a not in ANALYZERS]
+    if bad:
+        print(f"repro.vet: unknown analyzer(s): {', '.join(bad)} "
+              f"(choose from {', '.join(ANALYZERS)})", file=sys.stderr)
+        return 2
+
+    root = Path(args.root) if args.root else None
+    cfg = load_config(root=root or Path.cwd())
+    if root is not None:
+        cfg.root = root
+    if args.baseline:
+        cfg.baseline = args.baseline
+
+    paths = [Path(p) for p in args.paths]
+    if not paths and "code" in which:
+        default = cfg.root / "src" / "repro"
+        if default.exists():
+            paths = [default]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print("repro.vet: no such path(s): "
+              + ", ".join(str(p) for p in missing), file=sys.stderr)
+        return 2
+
+    findings, verdict = run_analyzers(cfg, which, paths)
+
+    bl_path = cfg.baseline_path()
+    if args.write_baseline:
+        previous = Baseline.load(bl_path)
+        Baseline.from_findings(findings, previous).save(bl_path)
+        print(f"repro.vet: wrote {len(findings)} finding(s) to {bl_path}")
+        return 0
+
+    baseline = Baseline() if args.no_baseline else Baseline.load(bl_path)
+    new, suppressed, unused = baseline.split(findings)
+
+    if args.as_json:
+        report = {
+            "findings": [f.to_dict() for f in new],
+            "suppressed": [f.to_dict() for f in suppressed],
+            "unused_baseline": [e.key() for e in unused],
+            "counts": counts_by_severity(new),
+        }
+        if verdict is not None:
+            report["verdict"] = verdict
+        print(json.dumps(report, indent=1, sort_keys=True))
+    else:
+        _print_text(new, suppressed, unused, verdict)
+
+    return 1 if any(f.severity == "error" for f in new) else 0
+
+
+if __name__ == "__main__":          # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,136 @@
+"""``[tool.repro-vet]`` configuration (pyproject.toml).
+
+Everything has a working default — a bare ``python -m repro.vet`` on a
+checkout needs no config at all.  The pyproject block can:
+
+  * move the baseline file (``baseline = ".vet-baseline.json"``);
+  * re-rank any rule's severity (``[tool.repro-vet.severity]``,
+    ``rule-id = "error" | "warning" | "info" | "off"``);
+  * change which modules count as serving/tuner *hot paths* for the
+    code analyzer (``hot_path_modules``);
+  * tighten or relax the lowering analyzer's per-backend op budgets
+    (``[tool.repro-vet.lowering.budgets.<backend>]``, opcode -> count
+    per 1-D application).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional
+
+try:                                 # Python 3.11+
+    import tomllib
+except ModuleNotFoundError:          # pragma: no cover — 3.10 fallback
+    import tomli as tomllib
+
+#: default severity per rule id (overridable per-project)
+DEFAULT_SEVERITY: Dict[str, str] = {
+    # invariant analyzer
+    "invariant-banded": "error",
+    "invariant-involution": "error",
+    "invariant-24": "error",
+    "invariant-meta": "error",
+    "invariant-gather-range": "error",
+    "invariant-roundtrip": "error",
+    # lowering analyzer
+    "lowering-dot-count": "error",
+    "lowering-hot-gather": "error",
+    "lowering-hot-overhead": "error",
+    "lowering-sparse-parity": "error",
+    "lowering-retrace": "error",
+    # code analyzer
+    "code-jit-per-call": "error",
+    "code-host-sync": "warning",
+    "code-lock-discipline": "error",
+    "code-locked-suffix": "error",
+    "code-nondet-key": "error",
+}
+
+#: per-backend op budget for the matmul hot path, per 1-D application.
+#: the window (im2col) gather is intrinsic; everything beyond it is the
+#: runtime overhead SPIDER's §3.3 row-swap contract forbids.
+DEFAULT_HOT_BUDGET: Dict[str, Dict[str, int]] = {
+    "gemm": {"gather": 1, "dynamic-slice": 0},
+    "sptc": {"gather": 1, "dynamic-slice": 0},
+}
+
+
+@dataclasses.dataclass
+class VetConfig:
+    baseline: str = ".vet-baseline.json"
+    severity: Dict[str, str] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_SEVERITY))
+    hot_path_modules: List[str] = dataclasses.field(
+        default_factory=lambda: ["serving", "tuner"])
+    hot_path_functions: List[str] = dataclasses.field(
+        default_factory=lambda: ["submit", "_run_batch", "_execute",
+                                 "_worker", "map", "drain", "__call__",
+                                 "tuned_apply", "tuned_apply_batched"])
+    lowering_budgets: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=lambda: {b: dict(v)
+                                 for b, v in DEFAULT_HOT_BUDGET.items()})
+    lowering_backends: List[str] = dataclasses.field(
+        default_factory=lambda: ["gemm", "sptc"])
+    invariant_radii: List[int] = dataclasses.field(
+        default_factory=lambda: [1, 2, 3, 4])
+    root: Path = dataclasses.field(default_factory=Path.cwd)
+
+    def severity_of(self, rule: str, default: str = "error") -> str:
+        return self.severity.get(rule, DEFAULT_SEVERITY.get(rule, default))
+
+    def baseline_path(self) -> Path:
+        p = Path(self.baseline)
+        return p if p.is_absolute() else self.root / p
+
+
+def load_config(pyproject: Optional[Path] = None,
+                root: Optional[Path] = None) -> VetConfig:
+    """Config from a pyproject.toml's ``[tool.repro-vet]`` block.
+
+    Missing file / missing block -> all defaults.  ``root`` anchors the
+    relative baseline path (defaults to the pyproject's directory).
+    """
+    cfg = VetConfig()
+    if pyproject is None:
+        pyproject = _find_pyproject(root or Path.cwd())
+    if pyproject is None or not pyproject.exists():
+        if root is not None:
+            cfg.root = Path(root)
+        return cfg
+    cfg.root = Path(root) if root is not None else pyproject.parent
+    with open(pyproject, "rb") as f:
+        data = tomllib.load(f)
+    block = data.get("tool", {}).get("repro-vet", {})
+    if not isinstance(block, dict):
+        return cfg
+    if isinstance(block.get("baseline"), str):
+        cfg.baseline = block["baseline"]
+    if isinstance(block.get("hot_path_modules"), list):
+        cfg.hot_path_modules = [str(m) for m in block["hot_path_modules"]]
+    if isinstance(block.get("hot_path_functions"), list):
+        cfg.hot_path_functions = [str(m) for m in block["hot_path_functions"]]
+    if isinstance(block.get("invariant_radii"), list):
+        cfg.invariant_radii = [int(r) for r in block["invariant_radii"]]
+    sev = block.get("severity", {})
+    if isinstance(sev, dict):
+        for rule, s in sev.items():
+            cfg.severity[str(rule)] = str(s)
+    lowering = block.get("lowering", {})
+    if isinstance(lowering, dict):
+        if isinstance(lowering.get("backends"), list):
+            cfg.lowering_backends = [str(b) for b in lowering["backends"]]
+        budgets = lowering.get("budgets", {})
+        if isinstance(budgets, dict):
+            for backend, ops in budgets.items():
+                if isinstance(ops, dict):
+                    cfg.lowering_budgets.setdefault(str(backend), {}).update(
+                        {str(op): int(n) for op, n in ops.items()})
+    return cfg
+
+
+def _find_pyproject(start: Path) -> Optional[Path]:
+    for d in [start] + list(start.parents):
+        candidate = d / "pyproject.toml"
+        if candidate.exists():
+            return candidate
+    return None

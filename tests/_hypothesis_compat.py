@@ -8,6 +8,8 @@ Usage in test modules::
 """
 import pytest
 
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

@@ -1,7 +1,6 @@
 """Analytic cost model tests — must reproduce paper Table 1 (Box-2D3R, c=8,
 TCStencil L=16) and the §2.3 asymptotic redundancy bounds."""
 import numpy as np
-import pytest
 
 from repro.core import analysis
 

@@ -1,6 +1,5 @@
 """StencilEngine backend-equivalence tests: every backend must compute the
 same stencil as the direct shifted-FMA oracle, across the paper's suite."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,7 +8,7 @@ from repro.core.engine import StencilEngine, apply_stencil
 from repro.core.stencil import make_stencil, paper_suite
 from repro.core.sptc import sptc_matmul, swap_rows
 from repro.core.sparsify import sparsify_stencil_kernel
-from repro.core.transform import kernel_matrix, default_l
+from repro.core.transform import kernel_matrix
 
 
 def _ref(spec, x):

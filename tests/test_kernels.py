@@ -1,6 +1,5 @@
 """Per-kernel Pallas (interpret=True) vs ref.py oracle sweeps over
 shapes & dtypes, per the kernel deliverable contract."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

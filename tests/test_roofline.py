@@ -2,8 +2,6 @@
 collective bytes), term arithmetic, and 6ND counting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.roofline import analysis as RA
 from repro.roofline.hlo_parse import analyze, parse_module

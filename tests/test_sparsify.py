@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.sparsify import (Sparse24, apply_col_perm, decode_24,
+from repro.core.sparsify import (apply_col_perm, decode_24,
                                  encode_24, is_24_sparse,
                                  sparsify_stencil_kernel, strided_swap_perm)
 from repro.core.transform import default_l, kernel_matrix

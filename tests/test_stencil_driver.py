@@ -207,6 +207,61 @@ def test_latency_window_percentiles():
     assert LatencyWindow().as_dict()["p99_ms"] == 0.0
 
 
+def test_group_metrics_concurrent_bumps_lose_no_increments():
+    # submit-path counters are bumped from caller threads while the batch
+    # thread bumps completion counters; a bare `+= 1` interleaves its
+    # LOAD/ADD/STORE under the GIL and drops increments.  bump() must not.
+    from repro.serving.metrics import GroupMetrics
+
+    m = GroupMetrics()
+    n_threads, n_iters = 8, 2000
+
+    def hammer():
+        for _ in range(n_iters):
+            m.bump(submitted=1, batched_jobs=2)
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.submitted == n_threads * n_iters
+    assert m.batched_jobs == 2 * n_threads * n_iters
+    assert m.as_dict()["submitted"] == n_threads * n_iters
+
+
+def test_latency_window_concurrent_observe_and_percentile():
+    # percentile() sorts the window while observe() appends from the
+    # batch thread; without the internal snapshot this raises
+    # "deque mutated during iteration".
+    w = LatencyWindow(maxlen=256)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            w.observe(i * 1e-4)
+            i += 1
+
+    def reader():
+        try:
+            for _ in range(500):
+                w.percentile(99)
+                w.as_dict()
+        except RuntimeError as e:          # pragma: no cover — the bug
+            errors.append(e)
+
+    wt = threading.Thread(target=writer)
+    rt = threading.Thread(target=reader)
+    wt.start()
+    rt.start()
+    rt.join()
+    stop.set()
+    wt.join()
+    assert not errors
+
+
 # ---------------------------------------------------------------------------
 # scheduler semantics (traffic-class agnostic layer)
 # ---------------------------------------------------------------------------

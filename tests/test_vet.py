@@ -1,0 +1,310 @@
+"""repro.vet tests: fixture corpus (bad snippets flagged, clean twins
+accepted), invariant failure injection, baseline mechanics, CLI exit
+codes, and clean-tree acceptance of the shipped sources."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.sparsify import (apply_col_perm, encode_24,
+                                 sparsify_stencil_kernel, strided_swap_perm)
+from repro.core.transform import kernel_matrix
+from repro.vet import code as vet_code
+from repro.vet import invariants
+from repro.vet.baseline import Baseline, BaselineEntry
+from repro.vet.cli import main as vet_main
+from repro.vet.config import VetConfig, load_config
+from repro.vet.findings import Finding, counts_by_severity, worst_severity
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "vet_fixtures"
+
+
+def cfg_for(root: Path) -> VetConfig:
+    cfg = VetConfig()
+    cfg.root = root
+    return cfg
+
+
+def rules_hit(path: Path) -> set:
+    findings = vet_code.check_file(cfg_for(FIXTURES), path)
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# code analyzer: fixture corpus
+# ---------------------------------------------------------------------------
+
+BAD_FIXTURES = [
+    ("serving/bad_jit_per_call.py", "code-jit-per-call", 2),
+    ("serving/bad_host_sync.py", "code-host-sync", 3),
+    ("serving/bad_lock_discipline.py", "code-lock-discipline", 1),
+    ("serving/bad_lock_discipline.py", "code-locked-suffix", 1),
+    ("tuner/bad_nondet_key.py", "code-nondet-key", 2),
+]
+
+CLEAN_FIXTURES = [
+    "serving/clean_jit_memoized.py",
+    "serving/clean_host_sync.py",
+    "serving/clean_lock_discipline.py",
+    "tuner/clean_nondet_key.py",
+]
+
+
+@pytest.mark.parametrize("rel,rule,n", BAD_FIXTURES)
+def test_bad_fixture_is_flagged(rel, rule, n):
+    findings = vet_code.check_file(cfg_for(FIXTURES), FIXTURES / rel)
+    hits = [f for f in findings if f.rule == rule]
+    assert len(hits) == n, (rel, rule, [f.format() for f in findings])
+    for f in hits:
+        assert f.line > 0 and f.symbol and f.message
+
+
+@pytest.mark.parametrize("rel", CLEAN_FIXTURES)
+def test_clean_twin_is_accepted(rel):
+    findings = vet_code.check_file(cfg_for(FIXTURES), FIXTURES / rel)
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_rules_only_fire_in_hot_modules(tmp_path):
+    # the same bad code outside serving/tuner directories is not flagged
+    cold = tmp_path / "models" / "bad.py"
+    cold.parent.mkdir()
+    cold.write_text((FIXTURES / "serving/bad_jit_per_call.py").read_text())
+    assert vet_code.check_file(cfg_for(tmp_path), cold) == []
+
+
+def test_severity_off_disables_a_code_rule():
+    cfg = cfg_for(FIXTURES)
+    cfg.severity["code-host-sync"] = "off"
+    findings = vet_code.check_file(cfg, FIXTURES / "serving/bad_host_sync.py")
+    assert all(f.rule != "code-host-sync" for f in findings)
+
+
+def test_unparseable_file_yields_parse_finding(tmp_path):
+    bad = tmp_path / "serving" / "oops.py"
+    bad.parent.mkdir()
+    bad.write_text("def broken(:\n")
+    findings = vet_code.check_file(cfg_for(tmp_path), bad)
+    assert [f.rule for f in findings] == ["code-parse"]
+    assert findings[0].severity == "error"
+
+
+# ---------------------------------------------------------------------------
+# invariant analyzer: failure injection
+# ---------------------------------------------------------------------------
+
+def test_invariant_sweep_is_clean_on_shipped_transform():
+    cfg = VetConfig()
+    cfg.invariant_radii = [1, 2]          # trimmed sweep for test speed
+    assert invariants.run(cfg) == []
+
+
+def test_injected_band_corruption_is_found():
+    cfg = VetConfig()
+    w = np.array([1.0, 2.0, 1.0])
+    K = kernel_matrix(w, L=4, pad_width=True)
+    K[0, -1] = 7.0                         # off-band garbage
+    fs = invariants.check_kernel_matrix(cfg, K, w, 4, "inj")
+    assert any(f.rule == "invariant-banded" for f in fs)
+
+
+def test_injected_bad_permutation_is_found():
+    cfg = VetConfig()
+    perm = strided_swap_perm(4).copy()
+    perm[0], perm[1] = perm[1], perm[0]    # break the involution
+    fs = invariants.check_involution(cfg, perm, "inj")
+    assert any(f.rule == "invariant-involution" for f in fs)
+    fs = invariants.check_involution(cfg, np.zeros(8, dtype=int), "inj")
+    assert any("not a permutation" in f.message for f in fs)
+
+
+def test_injected_dense_segment_is_found():
+    cfg = VetConfig()
+    Kp = np.zeros((2, 8))
+    Kp[0, :3] = 1.0                        # 3 non-zeros in one 4-segment
+    fs = invariants.check_24_pattern(cfg, Kp, "inj")
+    assert any(f.rule == "invariant-24" for f in fs)
+
+
+def test_injected_meta_corruption_is_found():
+    cfg = VetConfig()
+    w = np.array([1.0, 2.0, 1.0])
+    K = kernel_matrix(w, L=4, pad_width=True)
+    Kp = apply_col_perm(K, strided_swap_perm(4))
+    sp = encode_24(Kp)
+    bad_meta = np.asarray(sp.meta).copy()
+    bad_meta[0, 0], bad_meta[0, 1] = bad_meta[0, 1], bad_meta[0, 0]
+    import dataclasses
+    corrupted = dataclasses.replace(sp, meta=bad_meta)
+    fs = invariants.check_sparse24(cfg, corrupted, None, "inj")
+    assert any(f.rule == "invariant-meta" for f in fs)
+
+
+def test_injected_value_corruption_fails_roundtrip():
+    cfg = VetConfig()
+    sk = sparsify_stencil_kernel(np.array([1.0, 2.0, 1.0]), L=4)
+    Kp = apply_col_perm(kernel_matrix(np.array([1.0, 2.0, 1.0]), L=4,
+                                      pad_width=True), sk.perm)
+    sp = encode_24(Kp)
+    import dataclasses
+    bad_vals = np.asarray(sp.values).copy()
+    bad_vals[0, 0] += 1.0
+    corrupted = dataclasses.replace(sp, values=bad_vals)
+    fs = invariants.check_sparse24(cfg, corrupted, Kp, "inj")
+    assert any(f.rule == "invariant-roundtrip" for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# findings / baseline mechanics
+# ---------------------------------------------------------------------------
+
+def test_finding_roundtrip_and_severity_order():
+    f = Finding(rule="code-host-sync", severity="warning",
+                path="src/x.py", line=3, symbol="A.b", message="m")
+    assert Finding.from_dict(f.to_dict()) == f
+    assert "src/x.py:3" in f.format()
+    e = Finding(rule="r", severity="error", path="p", line=0,
+                symbol="s", message="m")
+    assert worst_severity([f, e]) == "error"
+    assert counts_by_severity([f, e]) == {"error": 1, "warning": 1, "info": 0}
+    with pytest.raises(ValueError):
+        Finding(rule="r", severity="fatal", path="p", line=0,
+                symbol="s", message="m")
+
+
+def test_baseline_split_suppresses_and_reports_unused(tmp_path):
+    f1 = Finding(rule="r1", severity="error", path="a.py", line=10,
+                 symbol="f", message="m")
+    f2 = Finding(rule="r2", severity="error", path="b.py", line=20,
+                 symbol="g", message="m")
+    bl = Baseline([BaselineEntry(rule="r1", path="a.py", symbol="f",
+                                 reason="known"),
+                   BaselineEntry(rule="zzz", path="gone.py", symbol="h")])
+    new, suppressed, unused = bl.split([f1, f2])
+    assert new == [f2] and suppressed == [f1]
+    assert [e.rule for e in unused] == ["zzz"]
+    # line drift does not invalidate entries
+    import dataclasses
+    moved = dataclasses.replace(f1, line=99)
+    assert bl.split([moved])[1] == [moved]
+    # save/load round-trip keeps reasons
+    p = tmp_path / "bl.json"
+    bl.save(p)
+    again = Baseline.load(p)
+    assert {e.key(): e.reason for e in again.entries} == \
+           {e.key(): e.reason for e in bl.entries}
+
+
+def test_load_config_reads_pyproject(tmp_path):
+    (tmp_path / "pyproject.toml").write_text(
+        "[tool.repro-vet]\n"
+        'baseline = "custom.json"\n'
+        'hot_path_modules = ["serving"]\n'
+        "invariant_radii = [1]\n"
+        "[tool.repro-vet.severity]\n"
+        'code-host-sync = "error"\n'
+        "[tool.repro-vet.lowering]\n"
+        'backends = ["gemm"]\n'
+        "[tool.repro-vet.lowering.budgets.gemm]\n"
+        "gather = 2\n")
+    cfg = load_config(pyproject=tmp_path / "pyproject.toml")
+    assert cfg.baseline == "custom.json"
+    assert cfg.hot_path_modules == ["serving"]
+    assert cfg.invariant_radii == [1]
+    assert cfg.severity_of("code-host-sync") == "error"
+    assert cfg.lowering_backends == ["gemm"]
+    assert cfg.lowering_budgets["gemm"]["gather"] == 2
+    assert cfg.baseline_path() == tmp_path / "custom.json"
+
+
+def test_repo_pyproject_configures_vet():
+    cfg = load_config(pyproject=REPO / "pyproject.toml")
+    assert cfg.severity_of("code-host-sync") == "warning"
+    assert set(cfg.lowering_backends) == {"gemm", "sptc"}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_flags_fixture_corpus_nonzero(capsys):
+    rc = vet_main(["--analyzers", "code", "--no-baseline",
+                   "--root", str(FIXTURES), str(FIXTURES)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "code-jit-per-call" in out and "code-lock-discipline" in out
+
+
+def test_cli_clean_twin_dir_exits_zero(capsys, tmp_path):
+    hot = tmp_path / "serving"
+    hot.mkdir()
+    for rel in CLEAN_FIXTURES[:3]:
+        (hot / Path(rel).name).write_text((FIXTURES / rel).read_text())
+    rc = vet_main(["--analyzers", "code", "--no-baseline",
+                   "--root", str(tmp_path), str(tmp_path)])
+    assert rc == 0
+
+
+def test_cli_json_report_shape(capsys):
+    rc = vet_main(["--analyzers", "code", "--no-baseline", "--json",
+                   "--root", str(FIXTURES), str(FIXTURES)])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert {"findings", "suppressed", "unused_baseline", "counts"} \
+           <= set(report)
+    assert report["counts"]["error"] >= 1
+    rules = {f["rule"] for f in report["findings"]}
+    assert "code-nondet-key" in rules
+
+
+def test_cli_write_baseline_then_pass(tmp_path, capsys):
+    hot = tmp_path / "serving"
+    hot.mkdir()
+    (hot / "bad.py").write_text(
+        (FIXTURES / "serving/bad_jit_per_call.py").read_text())
+    bl = tmp_path / "bl.json"
+    rc = vet_main(["--analyzers", "code", "--root", str(tmp_path),
+                   "--baseline", str(bl), "--write-baseline",
+                   str(tmp_path)])
+    assert rc == 0 and bl.exists()
+    capsys.readouterr()
+    rc = vet_main(["--analyzers", "code", "--root", str(tmp_path),
+                   "--baseline", str(bl), str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "suppressed by baseline" in out
+
+
+def test_cli_unknown_analyzer_usage_error(capsys):
+    assert vet_main(["--analyzers", "nope"]) == 2
+    assert "unknown analyzer" in capsys.readouterr().err
+
+
+def test_cli_missing_path_usage_error(capsys):
+    rc = vet_main(["--analyzers", "code", "/definitely/not/here"])
+    assert rc == 2
+
+
+# ---------------------------------------------------------------------------
+# clean-tree acceptance: the shipped sources pass modulo the baseline
+# ---------------------------------------------------------------------------
+
+def test_shipped_tree_passes_code_analyzer_modulo_baseline():
+    cfg = load_config(pyproject=REPO / "pyproject.toml")
+    findings = vet_code.run(cfg, [REPO / "src" / "repro"])
+    baseline = Baseline.load(cfg.baseline_path())
+    new, suppressed, _unused = baseline.split(findings)
+    errors = [f for f in new if f.severity == "error"]
+    assert errors == [], [f.format() for f in errors]
+    # the two intentional worker-thread syncs are baselined, not silenced
+    assert {f.symbol for f in suppressed} == {
+        "GenerateDriver._run_batch", "StencilDriver._run_batch"}
+
+
+def test_shipped_invariants_hold_over_registry_sweep():
+    cfg = load_config(pyproject=REPO / "pyproject.toml")
+    assert invariants.run(cfg) == []

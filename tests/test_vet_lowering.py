@@ -1,0 +1,65 @@
+"""Lowering analyzer tests: the shipped engines certify zero-overhead,
+and tightened budgets / synthetic overhead are detected."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.stencil import make_stencil
+from repro.vet import lowering
+from repro.vet.config import VetConfig
+
+
+def test_n_applications_matches_engine_structure():
+    star = make_stencil("star", 2, 1, seed=0)
+    box = make_stencil("box", 2, 1, seed=0)
+    assert lowering.n_applications(star, fused=False) == 2
+    assert lowering.n_applications(box, fused=True) == 1
+    assert lowering.n_applications(box, fused=False) == 3   # 2r+1 rows
+    assert lowering.n_applications(make_stencil("star", 1, 2, seed=0),
+                                   fused=False) == 1
+
+
+def test_shipped_engines_certify_zero_overhead():
+    cfg = VetConfig()
+    findings, verdict = lowering.run(cfg)
+    assert findings == [], [f.format() for f in findings]
+    assert set(verdict) == {"stencil_gemm", "sptc_spmm"}
+    for kernel, v in verdict.items():
+        assert v["certified"], (kernel, v)
+        assert v["traces"] == 1
+        for probe, counts in v["probes"].items():
+            # the intrinsic im2col window read is the ONLY gather
+            assert counts["gather"] <= counts["dot"], (probe, counts)
+            assert counts["dynamic-slice"] == 0, (probe, counts)
+    # sparse parity: sptc lowers to the same overhead profile as gemm
+    gemm = {k.split("/", 1)[1]: v
+            for k, v in verdict["stencil_gemm"]["probes"].items()}
+    sptc = {k.split("/", 1)[1]: v
+            for k, v in verdict["sptc_spmm"]["probes"].items()}
+    assert gemm == sptc
+
+
+def test_tightened_budget_produces_findings():
+    cfg = VetConfig()
+    cfg.lowering_backends = ["gemm"]
+    cfg.lowering_budgets["gemm"]["gather"] = 0     # forbid the window read
+    findings, verdict = lowering.run(cfg)
+    assert any(f.rule == "lowering-hot-gather" for f in findings)
+    assert not verdict["stencil_gemm"]["certified"]
+
+
+def test_hot_counts_covers_all_overhead_ops():
+    eng_spec = make_stencil("star", 2, 1, seed=7)
+    from repro.core.engine import StencilEngine
+    report = lowering.lower_engine(StencilEngine(eng_spec, backend="gemm"),
+                                   (34, 34))
+    counts = lowering.hot_counts(report)
+    assert set(counts) == set(lowering.OVERHEAD_OPS) | {"dot"}
+    assert counts["dot"] == 2
+    assert report.histogram()      # non-empty backward closure
+
+
+def test_trace_count_is_one_for_fixed_shape():
+    from repro.core.engine import StencilEngine
+    eng = StencilEngine(make_stencil("star", 2, 1, seed=7), backend="sptc")
+    assert lowering.trace_count(eng, (20, 20), calls=3) == 1

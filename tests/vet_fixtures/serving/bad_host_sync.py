@@ -1,0 +1,14 @@
+"""FIXTURE (bad): host syncs on the hot path -> code-host-sync."""
+import numpy as np
+
+
+class Driver:
+    def submit(self, spec, x):
+        depth = np.asarray(x)                # device->host transfer
+        return depth
+
+    def _run_batch(self, key, jobs):
+        results = [j * 2 for j in jobs]
+        results[-1].block_until_ready()      # scheduler thread stalls
+        score = float(results[0])            # scalar pull
+        return results, score

@@ -1,0 +1,15 @@
+"""FIXTURE (bad): jax.jit constructed per request -> code-jit-per-call."""
+import jax
+
+
+class Driver:
+    def submit(self, spec, x):
+        fn = jax.jit(lambda v: v * 2)        # rebuilt every request
+        return fn(x)
+
+    def _run_batch(self, key, jobs):
+        out = []
+        for j in jobs:
+            step = jax.jit(lambda v: v + 1)  # jit inside a loop
+            out.append(step(j))
+        return out

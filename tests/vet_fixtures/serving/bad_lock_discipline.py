@@ -1,0 +1,28 @@
+"""FIXTURE (bad): mixed locked/unlocked mutation + naked *_locked call."""
+import threading
+
+
+class Scheduler:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []
+        self.submitted = 0
+
+    def submit(self, job):
+        self.submitted += 1                  # unlocked counter bump...
+        with self._lock:
+            self._queue.append(job)
+
+    def _worker(self):
+        with self._lock:
+            self.submitted += 1              # ...but locked here: race
+            batch = self._pop_ready_locked()
+        return batch
+
+    def drain(self):
+        return self._pop_ready_locked()      # lock not held!
+
+    def _pop_ready_locked(self):
+        with_lock = list(self._queue)
+        self._queue.clear()
+        return with_lock

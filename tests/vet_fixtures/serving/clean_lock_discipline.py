@@ -1,0 +1,28 @@
+"""FIXTURE (clean twin): every shared mutation under the lock."""
+import threading
+
+
+class Scheduler:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []
+        self.submitted = 0
+
+    def submit(self, job):
+        with self._lock:
+            self.submitted += 1
+            self._queue.append(job)
+
+    def _worker(self):
+        with self._lock:
+            self.submitted += 1
+            return self._pop_ready_locked()
+
+    def _drain_locked(self):
+        # *_locked caller: lock held by convention, call is fine
+        return self._pop_ready_locked()
+
+    def _pop_ready_locked(self):
+        batch = list(self._queue)
+        self._queue.clear()
+        return batch

@@ -1,0 +1,11 @@
+"""FIXTURE (bad): set iteration order leaks into a cache key."""
+
+
+def plan_cache_key(spec, backends):
+    opts = set(backends)
+    return "|".join(opts)                    # order depends on hashing
+
+
+def spec_fingerprint(spec):
+    tags = {spec.shape, str(spec.radius)}
+    return str(tags)                         # str() of a set

@@ -1,0 +1,11 @@
+"""FIXTURE (clean twin): sets are sorted before entering the key."""
+
+
+def plan_cache_key(spec, backends):
+    opts = set(backends)
+    return "|".join(sorted(opts))
+
+
+def spec_fingerprint(spec):
+    tags = {spec.shape, str(spec.radius)}
+    return str(sorted(tags))
