@@ -27,7 +27,7 @@ def main() -> None:
     _section("Serving driver — continuous batching (BENCH_serving.json)")
     serving_bench.main([], out="BENCH_serving.json", quick=True)
     _section("Roofline table — dry-run derived (EXPERIMENTS.md §Roofline)")
-    roofline_table.main()
+    roofline_table.main([])
     print(f"\n# benchmarks completed in {time.time()-t0:.1f}s")
 
 

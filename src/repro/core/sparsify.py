@@ -144,6 +144,28 @@ def decode_24(sp: Sparse24) -> np.ndarray:
     return out
 
 
+def sparsify_matrices(mats: "tuple[np.ndarray, ...] | list[np.ndarray]",
+                      L: int) -> "tuple[np.ndarray, tuple[Sparse24, ...], bool]":
+    """Strided-swap + 2:4-encode a family of (L, 2L) kernel matrices.
+
+    The lowering pipeline's stage-3 producer (see :mod:`repro.core.ir`):
+    ONE permutation serves every matrix, each matrix gets its own
+    compressed operand, and the returned flag records whether all
+    operands share identical metadata (the variable-coefficient
+    shared-pattern invariant — trivially true when the matrices share
+    one zero structure).
+    """
+    perm = strided_swap_perm(L)
+    operands = []
+    for K in mats:
+        Kp = apply_col_perm(np.asarray(K), perm)
+        if not is_24_sparse(Kp):   # structural guarantee; double-checked
+            raise AssertionError("strided swap failed to produce 2:4 pattern")
+        operands.append(encode_24(Kp))
+    shared = len({op.meta.tobytes() for op in operands}) <= 1
+    return perm, tuple(operands), shared
+
+
 @dataclasses.dataclass(frozen=True)
 class SparseStencilKernel:
     """A 1-D stencil kernel fully transformed for SpTC execution.

@@ -16,7 +16,9 @@ BatchScheduler` layer (the same one LM decode traffic uses, see
 
   * Jobs are bucketed by **tuner plan key** — spec content fingerprint
     × halo-inclusive shape bucket (next pow2 per dim) × dtype × device
-    — so every batch runs one compiled program under one tuned plan.
+    × coefficient mode × temporal block size — so every batch runs one
+    compiled program under one tuned plan (a ``temporal_steps=k`` job
+    carries the k·r halo and never co-batches with single-step jobs).
   * ``padding`` policy decides how near-miss shapes inside a bucket
     co-batch: ``"bucket"`` trailing-pads every job to the pow2 bucket
     shape (one compiled program per plan, some wasted FLOPs), ``"max"``
@@ -81,32 +83,45 @@ class StencilDriver:
         self.mode = mode
         self.metrics_registry = MetricsRegistry()
         self._specs: dict = {}          # group key -> StencilSpec
+        self._steps: dict = {}          # group key -> temporal block size
         self._sched = BatchScheduler(self._run_batch, policy,
                                      name="stencil-driver",
                                      autostart=autostart)
 
     # -- admission -----------------------------------------------------------
-    def group_key(self, spec: StencilSpec, x) -> str:
+    def group_key(self, spec: StencilSpec, x,
+                  temporal_steps: int = 1) -> str:
         """The batch group ``(spec, x)`` lands in (tuner plan key string)."""
-        key = batch_group_key(spec, x.shape, x.dtype)
+        key = batch_group_key(spec, x.shape, x.dtype,
+                              temporal_steps=temporal_steps)
         if self.padding == "exact":
             key += ";exact=" + "x".join(str(s) for s in x.shape)
         return key
 
-    def submit(self, spec: StencilSpec, x) -> Future:
-        """Enqueue one job; the Future resolves to the interior update."""
+    def submit(self, spec: StencilSpec, x,
+               temporal_steps: int = 1) -> Future:
+        """Enqueue one job; the Future resolves to the interior update.
+
+        ``temporal_steps=k`` advances the job k steps in one fused
+        program; ``x`` must then carry the k·r halo.
+        """
         x = jnp.asarray(x)
+        if temporal_steps < 1:
+            raise ValueError(
+                f"temporal_steps must be >= 1, got {temporal_steps}")
         if x.ndim != spec.ndim:
             raise ValueError(
                 f"job array must be {spec.ndim}-D (halo-inclusive) for "
                 f"{spec.name}, got shape {tuple(x.shape)}")
-        if any(s <= 2 * spec.radius for s in x.shape):
+        halo = 2 * spec.radius * temporal_steps
+        if any(s <= halo for s in x.shape):
             raise ValueError(
-                f"every dim must exceed the halo 2r={2 * spec.radius} for "
+                f"every dim must exceed the halo 2kr={halo} for "
                 f"{spec.name}, got shape {tuple(x.shape)}")
-        key = self.group_key(spec, x)
+        key = self.group_key(spec, x, temporal_steps)
         m = self.metrics_registry.group(key)
         self._specs.setdefault(key, spec)
+        self._steps.setdefault(key, temporal_steps)
         try:
             fut = self._sched.submit(key, _StencilJob(x))
         except QueueFullError:
@@ -173,6 +188,7 @@ class StencilDriver:
 
     def _run_batch(self, key: str, jobs: List[_StencilJob]) -> list:
         spec = self._specs[key]
+        steps = self._steps.get(key, 1)
         m = self.metrics_registry.group(key)
         shapes = [tuple(j.x.shape) for j in jobs]
         target = self._target_shape(key, shapes)
@@ -181,14 +197,14 @@ class StencilDriver:
                 jnp.pad(j.x, [(0, t - s) for s, t in zip(j.x.shape, target)])
                 for j in jobs])
             ys = tuned_apply_batched(spec, xs, cache=self.cache,
-                                     mode=self.mode)
+                                     mode=self.mode, temporal_steps=steps)
         except BaseException:
             m.bump(failed=len(jobs))
             raise
-        r = spec.radius
+        halo = 2 * spec.radius * steps
         results = []
         for i, shape in enumerate(shapes):
-            crop = tuple(slice(0, s - 2 * r) for s in shape)
+            crop = tuple(slice(0, s - halo) for s in shape)
             results.append(ys[i][crop])
         if results:
             results[-1].block_until_ready()

@@ -31,15 +31,25 @@ def _resolve_mode(mode: str | None) -> str:
 def plan_for(spec: StencilSpec, shape: Sequence[int],
              dtype: Any = jnp.float32, *,
              cache: PlanCache | None = None, mode: str | None = None,
+             temporal_steps: int = 1, coefficients: Any = None,
              warmup: int = 1, iters: int = 3) -> Plan:
-    """The cached plan for (spec, halo-inclusive shape, dtype); tunes on miss."""
+    """The cached plan for (spec, halo-inclusive shape, dtype); tunes on miss.
+
+    ``temporal_steps`` and ``coefficients`` extend the cache key (and the
+    candidate set): a k-step temporal block tunes separately from the
+    single-step plan, and a variable-coefficient field tunes per content
+    fingerprint over the backends that support it.
+    """
     cache = cache if cache is not None else default_cache()
-    key = plan_key(spec, tuple(shape), dtype)
+    key = plan_key(spec, tuple(shape), dtype,
+                   coefficients=coefficients, temporal_steps=temporal_steps)
     plan = cache.lookup(key)
     if plan is None:
         before = cache.engine_plans(spec)
         result = autotune(spec, tuple(shape), dtype, mode=_resolve_mode(mode),
                           engine_factory=cache.engine,
+                          temporal_steps=temporal_steps,
+                          coefficients=coefficients,
                           warmup=warmup, iters=iters)
         cache.stats.tunes += 1
         plan = result.plan
@@ -53,25 +63,36 @@ def plan_for(spec: StencilSpec, shape: Sequence[int],
 def tuned_engine(spec: StencilSpec, shape: Sequence[int],
                  dtype: Any = jnp.float32, *,
                  cache: PlanCache | None = None, mode: str | None = None,
+                 temporal_steps: int = 1, coefficients: Any = None,
                  warmup: int = 1, iters: int = 3) -> StencilEngine:
     """Compiled engine for the tuned plan (shared jit cache across calls)."""
     cache = cache if cache is not None else default_cache()
     plan = plan_for(spec, shape, dtype, cache=cache, mode=mode,
+                    temporal_steps=temporal_steps, coefficients=coefficients,
                     warmup=warmup, iters=iters)
-    return cache.engine(spec, plan)
+    return cache.engine(spec, plan, coefficients=coefficients)
 
 
 def tuned_apply(spec: StencilSpec, x: jnp.ndarray, *,
                 cache: PlanCache | None = None,
-                mode: str | None = None, warmup: int = 1,
+                mode: str | None = None, temporal_steps: int = 1,
+                coefficients: Any = None, warmup: int = 1,
                 iters: int = 3) -> jnp.ndarray:
-    """Apply ``spec`` to ``x`` (halo included) through the tuned plan."""
+    """Apply ``spec`` to ``x`` (halo included) through the tuned plan.
+
+    A ``temporal_steps=k`` call expects ``x`` to carry the ``k·r`` halo
+    and advances k steps in one compiled program; ``coefficients`` routes
+    through the variable-coefficient emitter (fixed-shape per field).
+    """
     eng = tuned_engine(spec, x.shape, x.dtype, cache=cache, mode=mode,
+                       temporal_steps=temporal_steps,
+                       coefficients=coefficients,
                        warmup=warmup, iters=iters)
     return eng(x)
 
 
-def _validate_batch(spec: StencilSpec, xs: Any) -> jnp.ndarray:
+def _validate_batch(spec: StencilSpec, xs: Any,
+                    temporal_steps: int = 1) -> jnp.ndarray:
     """Normalize ``xs`` to one stacked (B, *spatial) array, loudly.
 
     Accepts a pre-stacked array or a sequence of per-job arrays.  Every
@@ -103,16 +124,17 @@ def _validate_batch(spec: StencilSpec, xs: Any) -> jnp.ndarray:
             f"tuned_apply_batched expects (B, *spatial-with-halo) with "
             f"{spec.ndim + 1} dims for {spec.name}, got shape "
             f"{tuple(xs.shape)}")
-    if any(s <= 2 * spec.radius for s in xs.shape[1:]):
+    halo = 2 * spec.radius * temporal_steps
+    if any(s <= halo for s in xs.shape[1:]):
         raise ValueError(
-            f"every spatial dim must exceed the halo 2r={2 * spec.radius} "
+            f"every spatial dim must exceed the halo 2kr={halo} "
             f"for {spec.name}, got batch shape {tuple(xs.shape)}")
     return xs
 
 
 def tuned_apply_batched(spec: StencilSpec, xs: Any, *,
                         cache: PlanCache | None = None,
-                        mode: str | None = None,
+                        mode: str | None = None, temporal_steps: int = 1,
                         warmup: int = 1, iters: int = 3) -> jnp.ndarray:
     """Apply ``spec`` to a batch ``xs`` of shape (B, *spatial-with-halo).
 
@@ -120,24 +142,30 @@ def tuned_apply_batched(spec: StencilSpec, xs: Any, *,
     validated and stacked).  The plan is tuned for one instance;
     execution is a single jit(vmap(engine)) program — the many-user
     serving path (continuously batched by `serving/stencil_driver.py`).
+    With ``temporal_steps=k`` every job advances k steps (jobs carry the
+    k·r halo).
     """
     cache = cache if cache is not None else default_cache()
-    xs = _validate_batch(spec, xs)
+    xs = _validate_batch(spec, xs, temporal_steps=temporal_steps)
     plan = plan_for(spec, tuple(xs.shape[1:]), xs.dtype, cache=cache,
-                    mode=mode, warmup=warmup, iters=iters)
+                    mode=mode, temporal_steps=temporal_steps,
+                    warmup=warmup, iters=iters)
     return cache.batched(spec, plan)(xs)
 
 
 def batch_group_key(spec: StencilSpec, shape: Sequence[int], dtype: Any,
-                    device: str | None = None) -> str:
+                    device: str | None = None, *,
+                    temporal_steps: int = 1) -> str:
     """Stable string key a serving driver buckets batchable jobs by.
 
     Two jobs with equal keys share one tuned plan AND one compiled
     jit(vmap) program once padded to the bucket shape: the key is the
     encoded :class:`~repro.tuner.plan.PlanKey` (spec fingerprint ×
-    halo-inclusive shape bucket × dtype × device kind).
+    halo-inclusive shape bucket × dtype × device kind × coefficient
+    mode × temporal block size).
     """
-    return plan_key(spec, tuple(shape), dtype, device).encode()
+    return plan_key(spec, tuple(shape), dtype, device,
+                    temporal_steps=temporal_steps).encode()
 
 
 def cache_stats(cache: PlanCache | None = None) -> dict:

@@ -5,19 +5,28 @@ Three maps, three lifetimes:
   plans     PlanKey -> Plan.  Cheap, serializable — persisted to a JSON
             file so tuning survives process restarts (set the path, or
             the ``REPRO_TUNER_CACHE`` env var for the default cache).
-  engines   (spec fingerprint, Plan) -> StencilEngine.  Holds the jitted
-            executable; this is what kills the re-jit-per-call pattern
-            the dead ``_cached_engine`` was meant to prevent.
-  batched   (spec fingerprint, Plan) -> jit(vmap(engine)).  The
-            many-user entry: one compiled program for a whole batch.
+  engines   (spec fingerprint, Plan, coeff fingerprint) -> StencilEngine.
+            Holds the jitted executable; this is what kills the
+            re-jit-per-call pattern the dead ``_cached_engine`` was meant
+            to prevent.
+  batched   same key -> jit(vmap(engine)).  The many-user entry: one
+            compiled program for a whole batch.
 
-Persistence format (version 1)::
+Persistence format (version 2; version-1 files still load)::
 
-    {"version": 1, "plans": {"spec=...;shape=...;dtype=...;dev=...":
-                             {"backend": "sptc", "L": 8, ...}}}
+    {"version": 2, "plans": {"v2;spec=...;shape=...;dtype=...;dev=...;
+                             coeff=const;steps=1":
+                             {"schema": 2, "backend": "sptc", "L": 8, ...}}}
 
-Writes are atomic (tmp file + rename) so a crashed process never leaves
-a truncated cache behind; unreadable files are ignored, not fatal.
+Forward compatibility: a future-versioned file, or any individual entry
+whose key/plan fails to decode, is skipped with a warning — never fatal
+(a fleet mixing code revisions must not poison each other's caches).
+Keys are re-canonicalized on load, so version-1 entries keep hitting.
+
+Writes are atomic (tmp file + rename) and *merging*: if the file changed
+on disk since this process last read it (another server tuned
+concurrently), the on-disk entries are merged in first — in-memory plans
+win conflicts — so a fleet converges on the union of its tuned plans.
 """
 from __future__ import annotations
 
@@ -25,17 +34,23 @@ import dataclasses
 import json
 import os
 import tempfile
+import warnings
 from pathlib import Path
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 
 from repro.core.engine import StencilEngine
 from repro.core.stencil import StencilSpec
-from repro.tuner.plan import Plan, PlanKey, spec_fingerprint
+from repro.tuner.plan import (Plan, PlanKey, coefficients_fingerprint,
+                              spec_fingerprint)
 
 CACHE_ENV_VAR = "REPRO_TUNER_CACHE"
-_FORMAT_VERSION = 1
+_FORMAT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
+
+#: engine-map key: (spec fingerprint, plan, coefficient fingerprint)
+EngineKey = Tuple[str, Plan, str]
 
 
 @dataclasses.dataclass
@@ -47,6 +62,8 @@ class CacheStats:
     engine_hits: int = 0
     loads: int = 0
     saves: int = 0
+    merges: int = 0
+    skipped_entries: int = 0
 
     @property
     def plan_hit_rate(self) -> float:
@@ -59,6 +76,11 @@ class CacheStats:
         return d
 
 
+def _coeff_fp(coefficients: Optional[Any]) -> str:
+    return ("const" if coefficients is None
+            else coefficients_fingerprint(coefficients))
+
+
 class PlanCache:
     """In-memory plan + executable cache, optionally backed by a JSON file."""
 
@@ -66,8 +88,9 @@ class PlanCache:
         self.path: Optional[Path] = Path(path).expanduser() if path else None
         self.stats = CacheStats()
         self._plans: Dict[str, Plan] = {}
-        self._engines: Dict[Tuple[str, Plan], StencilEngine] = {}
-        self._batched: Dict[Tuple[str, Plan], Callable] = {}
+        self._engines: Dict[EngineKey, StencilEngine] = {}
+        self._batched: Dict[EngineKey, Callable] = {}
+        self._disk_sig: Optional[Tuple[int, int]] = None
         if self.path is not None:
             self.load(missing_ok=True)
 
@@ -89,15 +112,22 @@ class PlanCache:
         return len(self._plans)
 
     # -- compiled executables ------------------------------------------------
-    def engine(self, spec: StencilSpec, plan: Plan) -> StencilEngine:
-        """The (memoized) compiled engine realizing ``plan`` for ``spec``."""
-        k = (spec_fingerprint(spec), plan)
+    def engine(self, spec: StencilSpec, plan: Plan,
+               coefficients: Optional[Any] = None) -> StencilEngine:
+        """The (memoized) compiled engine realizing ``plan`` for ``spec``.
+
+        Variable-coefficient engines key additionally on the coefficient
+        field's content fingerprint (the jitted program bakes the values).
+        """
+        k = (spec_fingerprint(spec), plan, _coeff_fp(coefficients))
         eng = self._engines.get(k)
         if eng is None:
             self.stats.engine_builds += 1
             eng = StencilEngine(spec, backend=plan.backend, L=plan.L,
                                 star_fast_path=plan.star_fast_path,
-                                fuse_rows=plan.fuse_rows)
+                                fuse_rows=plan.fuse_rows,
+                                temporal_steps=plan.temporal_steps,
+                                coefficients=coefficients)
             self._engines[k] = eng
         else:
             self.stats.engine_hits += 1
@@ -106,7 +136,7 @@ class PlanCache:
     def engine_plans(self, spec: StencilSpec) -> frozenset:
         """Plans that currently have a cached engine for ``spec``."""
         fp = spec_fingerprint(spec)
-        return frozenset(p for f, p in self._engines if f == fp)
+        return frozenset(p for f, p, _ in self._engines if f == fp)
 
     def prune_engines(self, spec: StencilSpec,
                       keep: "frozenset[Plan] | set[Plan]") -> int:
@@ -122,23 +152,84 @@ class PlanCache:
             self._batched.pop(k, None)
         return len(drop)
 
-    def batched(self, spec: StencilSpec, plan: Plan) -> Callable:
+    def batched(self, spec: StencilSpec, plan: Plan,
+                coefficients: Optional[Any] = None) -> Callable:
         """jit(vmap(engine)) over a leading batch axis, memoized."""
-        k = (spec_fingerprint(spec), plan)
+        k = (spec_fingerprint(spec), plan, _coeff_fp(coefficients))
         fn = self._batched.get(k)
         if fn is None:
-            eng = self.engine(spec, plan)
+            eng = self.engine(spec, plan, coefficients=coefficients)
             fn = jax.jit(jax.vmap(eng._fn))
             self._batched[k] = fn
         return fn
 
     # -- persistence ---------------------------------------------------------
+    @staticmethod
+    def _signature(path: Path) -> Optional[Tuple[int, int]]:
+        """Cheap change detector for the persisted file: (mtime_ns, size)."""
+        try:
+            st = path.stat()
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
+
+    def _read_plans(self, source: Path) -> Optional[Dict[str, Plan]]:
+        """Decode the persisted file, skipping bad entries with a warning.
+
+        Returns None when the whole file is unreadable / future-versioned
+        (callers treat that as empty); keys are re-canonicalized so
+        version-1 entries keep matching freshly-encoded lookups.
+        """
+        try:
+            payload = json.loads(source.read_text())
+            version = payload.get("version")
+            raw = payload.get("plans", {})
+            if not isinstance(raw, dict):
+                raise TypeError("'plans' must be a dict")
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(f"tuner cache {source}: unreadable ({e}); ignoring",
+                          RuntimeWarning, stacklevel=3)
+            return None
+        if version not in _READABLE_VERSIONS:
+            warnings.warn(
+                f"tuner cache {source}: format version {version!r} not in "
+                f"{_READABLE_VERSIONS}; ignoring", RuntimeWarning,
+                stacklevel=3)
+            return None
+        plans: Dict[str, Plan] = {}
+        for k, d in raw.items():
+            try:
+                key = PlanKey.decode(k)
+                plans[key.encode()] = Plan.from_dict(d)
+            except (ValueError, KeyError, TypeError) as e:
+                self.stats.skipped_entries += 1
+                warnings.warn(
+                    f"tuner cache {source}: skipping entry {k!r} ({e})",
+                    RuntimeWarning, stacklevel=3)
+        return plans
+
     def save(self, path: str | os.PathLike | None = None) -> Path:
-        """Atomically write all plans as JSON; returns the path written."""
+        """Atomically write all plans as JSON; returns the path written.
+
+        If the target changed on disk since this cache last read it, the
+        on-disk entries are merged in first (in-memory plans win), so
+        concurrent tuners converge instead of clobbering each other.
+        """
         target = Path(path).expanduser() if path else self.path
         if target is None:
             raise ValueError("no persistence path set for this cache")
         target.parent.mkdir(parents=True, exist_ok=True)
+        if target == self.path and target.exists():
+            sig = self._signature(target)
+            if sig is not None and sig != self._disk_sig:
+                disk = self._read_plans(target) or {}
+                merged = 0
+                for k, p in disk.items():
+                    if k not in self._plans:
+                        self._plans[k] = p
+                        merged += 1
+                if merged:
+                    self.stats.merges += 1
         payload = {"version": _FORMAT_VERSION,
                    "plans": {k: p.to_dict() for k, p in self._plans.items()}}
         fd, tmp = tempfile.mkstemp(dir=str(target.parent),
@@ -150,6 +241,8 @@ class PlanCache:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        if target == self.path:
+            self._disk_sig = self._signature(target)
         self.stats.saves += 1
         return target
 
@@ -163,15 +256,13 @@ class PlanCache:
             if missing_ok:
                 return 0
             raise FileNotFoundError(source)
-        try:
-            payload = json.loads(source.read_text())
-            if payload.get("version") != _FORMAT_VERSION:
-                return 0
-            plans = {k: Plan.from_dict(d)
-                     for k, d in payload.get("plans", {}).items()}
-        except (OSError, ValueError, KeyError, TypeError):
+        sig = self._signature(source)
+        plans = self._read_plans(source)
+        if plans is None:
             return 0               # corrupt/unreadable cache: retune, don't crash
         self._plans.update(plans)
+        if source == self.path:
+            self._disk_sig = sig
         self.stats.loads += 1
         return len(plans)
 
@@ -179,6 +270,7 @@ class PlanCache:
         self._plans.clear()
         self._engines.clear()
         self._batched.clear()
+        self._disk_sig = None
         if remove_file and self.path is not None and self.path.exists():
             self.path.unlink()
 

@@ -5,14 +5,22 @@ itself — the knobs SPIDER fixes at compile time.  A :class:`PlanKey`
 identifies the tuning problem: the *stencil* (content fingerprint, not
 object identity), the *input shape bucket* (next power of two per dim,
 so nearby sizes share one plan while jit still specializes exact
-shapes), the *dtype*, and the *device kind* (cpu/tpu/gpu — a plan tuned
-on CPU must not be trusted on TPU).
+shapes), the *dtype*, the *device kind* (cpu/tpu/gpu — a plan tuned
+on CPU must not be trusted on TPU), the *coefficient mode* (constant
+weights vs a fingerprinted variable-coefficient field), and the
+*temporal block size*.
+
+Schema versioning (``PLAN_SCHEMA``): serialized plans and encoded keys
+carry a version so caches written by future revisions are skipped, not
+misread; fields added later default when absent and unknown fields are
+ignored — PR-8's extended keys must not poison pre-existing
+``REPRO_TUNER_CACHE`` files, nor vice versa.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +28,11 @@ import numpy as np
 
 from repro.core.stencil import StencilSpec
 from repro.core.transform import default_l
+
+#: serialization schema for Plan dicts and PlanKey strings.
+#:   1  (implicit) backend/L/fuse_rows/star_fast_path; unversioned keys
+#:   2  + temporal_steps on Plan; versioned keys + coeff/steps fields
+PLAN_SCHEMA = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,28 +43,46 @@ class Plan:
     L: int
     fuse_rows: bool = False
     star_fast_path: bool = True
+    temporal_steps: int = 1
 
     def to_dict(self) -> dict:
-        return {"backend": self.backend, "L": int(self.L),
+        return {"schema": PLAN_SCHEMA,
+                "backend": self.backend, "L": int(self.L),
                 "fuse_rows": bool(self.fuse_rows),
-                "star_fast_path": bool(self.star_fast_path)}
+                "star_fast_path": bool(self.star_fast_path),
+                "temporal_steps": int(self.temporal_steps)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Plan":
+        """Tolerant decode: unknown fields ignored, missing fields default.
+
+        Raises ValueError on a future schema or a structurally unusable
+        dict — the cache loader turns that into a warn-and-skip.
+        """
+        schema = int(d.get("schema", 1))
+        if schema > PLAN_SCHEMA:
+            raise ValueError(
+                f"plan schema {schema} is newer than supported "
+                f"{PLAN_SCHEMA}")
         return cls(backend=str(d["backend"]), L=int(d["L"]),
                    fuse_rows=bool(d.get("fuse_rows", False)),
-                   star_fast_path=bool(d.get("star_fast_path", True)))
+                   star_fast_path=bool(d.get("star_fast_path", True)),
+                   temporal_steps=int(d.get("temporal_steps", 1)))
 
     @classmethod
     def default(cls, spec: StencilSpec, backend: str = "direct",
-                L: int | None = None) -> "Plan":
+                L: int | None = None, temporal_steps: int = 1) -> "Plan":
         """The plan `StencilEngine(spec, backend)` would have used."""
         return cls(backend=backend,
-                   L=L if L is not None else default_l(spec.radius))
+                   L=L if L is not None else default_l(spec.radius),
+                   temporal_steps=temporal_steps)
 
     def describe(self) -> str:
-        """Compact human-readable form, e.g. ``sptc/L8/fused``."""
-        return f"{self.backend}/L{self.L}{'/fused' if self.fuse_rows else ''}"
+        """Compact human-readable form, e.g. ``sptc/L8/fused/k4``."""
+        out = f"{self.backend}/L{self.L}{'/fused' if self.fuse_rows else ''}"
+        if self.temporal_steps != 1:
+            out += f"/k{self.temporal_steps}"
+        return out
 
 
 def spec_fingerprint(spec: StencilSpec) -> str:
@@ -59,6 +90,15 @@ def spec_fingerprint(spec: StencilSpec) -> str:
     h = hashlib.sha256()
     h.update(f"{spec.shape}|{spec.ndim}|{spec.radius}|".encode())
     h.update(np.ascontiguousarray(spec.weights, dtype=np.float64).tobytes())
+    return h.hexdigest()[:16]
+
+
+def coefficients_fingerprint(coefficients: Any) -> str:
+    """Content hash of a variable-coefficient field (shape + values)."""
+    c = np.ascontiguousarray(np.asarray(coefficients), dtype=np.float64)
+    h = hashlib.sha256()
+    h.update(f"{c.shape}|".encode())
+    h.update(c.tobytes())
     return h.hexdigest()[:16]
 
 
@@ -84,23 +124,51 @@ class PlanKey:
     bucket: Tuple[int, ...]
     dtype: str
     device: str
+    coeff: str = "const"       # "const" | "var-<fingerprint>"
+    steps: int = 1             # temporal block size the plan targets
 
     def encode(self) -> str:
-        """Stable string form used as the JSON dict key."""
+        """Stable string form used as the JSON dict key (schema-prefixed)."""
         shape = "x".join(str(s) for s in self.bucket)
-        return f"spec={self.spec_fp};shape={shape};dtype={self.dtype};dev={self.device}"
+        return (f"v{PLAN_SCHEMA};spec={self.spec_fp};shape={shape};"
+                f"dtype={self.dtype};dev={self.device};"
+                f"coeff={self.coeff};steps={int(self.steps)}")
 
     @classmethod
     def decode(cls, s: str) -> "PlanKey":
-        parts = dict(field.split("=", 1) for field in s.split(";"))
+        """Decode v1 (unversioned) or v2 keys; tolerate unknown fields.
+
+        Raises ValueError on a future-versioned or structurally corrupt
+        key — the cache loader turns that into a warn-and-skip.
+        """
+        fields = s.split(";")
+        version = 1
+        if fields and "=" not in fields[0]:
+            tag = fields[0]
+            if not tag.startswith("v") or not tag[1:].isdigit():
+                raise ValueError(f"unrecognized plan-key prefix {tag!r}")
+            version = int(tag[1:])
+            if version > PLAN_SCHEMA:
+                raise ValueError(
+                    f"plan-key schema {version} is newer than supported "
+                    f"{PLAN_SCHEMA}")
+            fields = fields[1:]
+        parts = dict(field.split("=", 1) for field in fields if field)
         bucket = tuple(int(v) for v in parts["shape"].split("x") if v)
         return cls(spec_fp=parts["spec"], bucket=bucket,
-                   dtype=parts["dtype"], device=parts["dev"])
+                   dtype=parts["dtype"], device=parts["dev"],
+                   coeff=parts.get("coeff", "const"),
+                   steps=int(parts.get("steps", 1)))
 
 
 def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype: Any,
-             device: str | None = None) -> PlanKey:
+             device: str | None = None, *,
+             coefficients: Optional[Any] = None,
+             temporal_steps: int = 1) -> PlanKey:
+    coeff = ("const" if coefficients is None
+             else f"var-{coefficients_fingerprint(coefficients)}")
     return PlanKey(spec_fp=spec_fingerprint(spec),
                    bucket=shape_bucket(tuple(shape)),
                    dtype=dtype_name(dtype),
-                   device=device if device is not None else device_kind())
+                   device=device if device is not None else device_kind(),
+                   coeff=coeff, steps=temporal_steps)

@@ -47,19 +47,34 @@ def l_candidates(radius: int, max_candidates: int = 3) -> List[int]:
     return sorted(cands)[:max_candidates]
 
 
-def candidate_plans(spec: StencilSpec, device: str | None = None) -> List[Plan]:
-    """All plans worth trying for ``spec`` on ``device``."""
+def candidate_plans(spec: StencilSpec, device: str | None = None, *,
+                    temporal_steps: int = 1,
+                    variable_coefficients: bool = False) -> List[Plan]:
+    """All plans worth trying for ``spec`` on ``device``.
+
+    ``temporal_steps`` stamps every candidate with the requested temporal
+    block; ``variable_coefficients`` restricts to the backends/modes the
+    variable-coefficient emitter supports (jnp backends, no row fusion,
+    no temporal blocking — see ``transform.lower_spec``).
+    """
     from repro.kernels.dispatch import applicable_backends
     plans: List[Plan] = []
     star = spec.shape == "star"
+    k = temporal_steps
     for backend in applicable_backends(spec, device):
+        if variable_coefficients and backend not in ("direct", "gemm",
+                                                     "sptc"):
+            continue
         if backend in ("direct", "pallas_direct"):
-            plans.append(Plan(backend=backend, L=default_l(spec.radius)))
+            plans.append(Plan(backend=backend, L=default_l(spec.radius),
+                              temporal_steps=k))
             continue
         for L in l_candidates(spec.radius):
-            plans.append(Plan(backend=backend, L=L))
-            if (spec.ndim == 2 and not star and backend in ("gemm", "sptc")):
-                plans.append(Plan(backend=backend, L=L, fuse_rows=True))
+            plans.append(Plan(backend=backend, L=L, temporal_steps=k))
+            if (spec.ndim == 2 and not star and backend in ("gemm", "sptc")
+                    and not variable_coefficients):
+                plans.append(Plan(backend=backend, L=L, fuse_rows=True,
+                                  temporal_steps=k))
     return plans
 
 
@@ -80,6 +95,8 @@ def static_cost(spec: StencilSpec, plan: Plan) -> float:
     sptc-like   L MACs per point per application (SpTC executes K/2, §3.2.3)
                 on the matrix unit.
     fuse_rows   same MACs, one dispatch (§Perf D single stacked GEMM).
+    temporal    a k-step block costs k× one step (per-step work is
+                unchanged — the §3.3 zero-overhead profile holds per step).
     """
     napps = _n_applications(spec, plan)
     if plan.backend == "direct":
@@ -95,7 +112,8 @@ def static_cost(spec: StencilSpec, plan: Plan) -> float:
         raise ValueError(f"unknown backend {plan.backend}")
     if plan.fuse_rows:
         dispatches = 1
-    return macs / tput + DISPATCH_OVERHEAD * dispatches
+    return plan.temporal_steps * (macs / tput
+                                  + DISPATCH_OVERHEAD * dispatches)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,11 +135,14 @@ class TuneResult:
                    if c.error is None and c.plan == self.plan)
 
 
-def _default_engine_factory(spec: StencilSpec, plan: Plan) -> "StencilEngine":
+def _default_engine_factory(spec: StencilSpec, plan: Plan,
+                            coefficients: Any = None) -> "StencilEngine":
     from repro.core.engine import StencilEngine
     return StencilEngine(spec, backend=plan.backend, L=plan.L,
                          star_fast_path=plan.star_fast_path,
-                         fuse_rows=plan.fuse_rows)
+                         fuse_rows=plan.fuse_rows,
+                         temporal_steps=plan.temporal_steps,
+                         coefficients=coefficients)
 
 
 def measure(fn: Callable, x: jnp.ndarray, warmup: int = 1,
@@ -141,17 +162,21 @@ def autotune(spec: StencilSpec, shape: Sequence[int],
              dtype: Any = jnp.float32, *,
              mode: str = "time",
              engine_factory: Callable | None = None,
+             temporal_steps: int = 1, coefficients: Any = None,
              warmup: int = 1, iters: int = 3, seed: int = 0) -> TuneResult:
     """Pick the best Plan for (spec, input shape, dtype) on this device.
 
     ``shape`` is the halo-inclusive input shape, exactly what the engine
-    will be called with.  Candidates that fail to build or run are skipped
-    (recorded with their error).  If every timed candidate fails — or
-    ``mode == "cost"`` — selection falls back to the static cost model.
+    will be called with (for a k-step temporal block that means the k·r
+    halo; for variable coefficients it must match the field's fixed
+    shape).  Candidates that fail to build or run are skipped (recorded
+    with their error).  If every timed candidate fails — or ``mode ==
+    "cost"`` — selection falls back to the static cost model.
     """
     if mode not in ("time", "cost"):
         raise ValueError(f"mode must be 'time' or 'cost', got {mode!r}")
-    plans = candidate_plans(spec)
+    plans = candidate_plans(spec, temporal_steps=temporal_steps,
+                            variable_coefficients=coefficients is not None)
     if not plans:
         raise RuntimeError(f"no applicable backends for {spec.name}")
     factory = engine_factory or _default_engine_factory
@@ -166,14 +191,16 @@ def autotune(spec: StencilSpec, shape: Sequence[int],
     cands: List[Candidate] = []
     for p in plans:
         try:
-            eng = factory(spec, p)
+            eng = factory(spec, p, coefficients=coefficients)
             t = measure(eng, x, warmup=warmup, iters=iters)
             cands.append(Candidate(p, t))
         except Exception as e:  # noqa: BLE001 — any backend failure skips it
             cands.append(Candidate(p, None, error=f"{type(e).__name__}: {e}"))
     timed = [c for c in cands if c.error is None]
     if not timed:
-        fallback = autotune(spec, shape, dtype, mode="cost")
+        fallback = autotune(spec, shape, dtype, mode="cost",
+                            temporal_steps=temporal_steps,
+                            coefficients=coefficients)
         return TuneResult(plan=fallback.plan, mode="cost",
                           candidates=tuple(cands) + fallback.candidates)
     best = min(timed, key=lambda c: c.score)

@@ -32,6 +32,8 @@ DEFAULT_SEVERITY: Dict[str, str] = {
     "invariant-meta": "error",
     "invariant-gather-range": "error",
     "invariant-roundtrip": "error",
+    "invariant-plan-stages": "error",
+    "invariant-shared-pattern": "error",
     # lowering analyzer
     "lowering-dot-count": "error",
     "lowering-hot-gather": "error",

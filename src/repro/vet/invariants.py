@@ -16,28 +16,47 @@ benchmark suite's row kernels × a radius/L sweep:
                           right segment
   invariant-roundtrip     decode(encode(Kp)) == Kp exactly
 
+On top of the per-matrix algebra, the analyzer lowers probe specs into
+the explicit :class:`~repro.core.ir.LoweredPlan` IR and re-checks the
+pipeline *as a whole* (still no jit, pure table inspection):
+
+  invariant-plan-stages    every plan carries the canonical stage
+                           subsequence for its backend family, passes
+                           structural validation, and keeps its tables
+                           mutually consistent (const, variable-
+                           coefficient, and temporal-blocked probes)
+  invariant-shared-pattern variable-coefficient plans share ONE 2:4
+                           pattern / meta-bits / gather schedule across
+                           all row operands — the property that lets the
+                           swap permutation be computed once
+
 Every check doubles as a *failure-injection* point for tests: pass a
 corrupted matrix / permutation / Sparse24 and the analyzer must produce
 the corresponding finding.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Iterator, List, Tuple
 
 import numpy as np
 
+from repro.core.ir import (MATRIX_BACKENDS, SPARSE_BACKENDS, STAGE_ORDER,
+                           LoweredPlan)
 from repro.core.sparsify import (Sparse24, apply_col_perm, decode_24,
                                  encode_24, is_24_sparse, strided_swap_perm)
-from repro.core.stencil import paper_suite
-from repro.core.transform import decompose_rows, default_l, kernel_matrix
+from repro.core.stencil import paper_suite, star_mask
+from repro.core.transform import (decompose_rows, default_l, kernel_matrix,
+                                  lower_spec)
 from repro.vet.config import VetConfig
 from repro.vet.findings import Finding
 
 _PATH = "src/repro/core/sparsify.py"
+_IR_PATH = "src/repro/core/ir.py"
 
 
-def _finding(cfg: VetConfig, rule: str, symbol: str, message: str) -> Finding:
-    return Finding(rule=rule, severity=cfg.severity_of(rule), path=_PATH,
+def _finding(cfg: VetConfig, rule: str, symbol: str, message: str,
+             path: str = _PATH) -> Finding:
+    return Finding(rule=rule, severity=cfg.severity_of(rule), path=path,
                    line=0, symbol=symbol, message=message)
 
 
@@ -183,8 +202,92 @@ def sweep_points(cfg: VetConfig):
             yield w, L, f"synthetic-r{r}/L{L}"
 
 
+# ---------------------------------------------------------------------------
+# LoweredPlan (IR) invariants — the pipeline as a whole
+# ---------------------------------------------------------------------------
+
+#: expected stage-name subsequence per backend family
+def _expected_stages(backend: str) -> Tuple[str, ...]:
+    if backend in SPARSE_BACKENDS:
+        return STAGE_ORDER
+    if backend in MATRIX_BACKENDS:
+        return tuple(n for n in STAGE_ORDER if n != "strided-swap")
+    return (STAGE_ORDER[0], STAGE_ORDER[-1])
+
+
+def check_lowered_plan(cfg: VetConfig, plan: LoweredPlan,
+                       symbol: str) -> List[Finding]:
+    """IR-level invariants: stage structure + the shared-pattern property."""
+    out: List[Finding] = []
+    try:
+        plan.validate()
+    except ValueError as e:
+        return [_finding(cfg, "invariant-plan-stages", symbol,
+                         f"plan failed structural validation: {e}",
+                         path=_IR_PATH)]
+    expected = _expected_stages(plan.emit.backend)
+    if plan.stage_names() != expected:
+        out.append(_finding(
+            cfg, "invariant-plan-stages", symbol,
+            f"stage sequence {plan.stage_names()} != expected {expected} "
+            f"for backend {plan.emit.backend}", path=_IR_PATH))
+    sp, gather = plan.sparsify, plan.gather
+    if plan.emit.coefficient_mode == "var" and sp is not None:
+        metas = {op.meta.tobytes() for op in sp.operands}
+        bits = {op.meta_bits().tobytes() for op in sp.operands}
+        if len(metas) > 1 or len(bits) > 1:
+            out.append(_finding(
+                cfg, "invariant-shared-pattern", symbol,
+                f"variable-coefficient operands carry {len(metas)} distinct "
+                f"2:4 patterns / {len(bits)} distinct meta-bit packings — "
+                "the swap permutation can no longer be computed once",
+                path=_IR_PATH))
+        elif not sp.shared_pattern:
+            out.append(_finding(
+                cfg, "invariant-shared-pattern", symbol,
+                "operands share one pattern but the plan does not record "
+                "shared_pattern=True", path=_IR_PATH))
+        if gather is not None and any(
+                not np.array_equal(s, gather.slots[0])
+                or not np.array_equal(t, gather.taps[0])
+                for s, t in zip(gather.slots, gather.taps)):
+            out.append(_finding(
+                cfg, "invariant-shared-pattern", symbol,
+                "variable-coefficient gather schedules differ across "
+                "operands — the slot/tap tables must be computed once from "
+                "the shared pattern", path=_IR_PATH))
+    return out
+
+
+def plan_probes(cfg: VetConfig) -> Iterator[Tuple[LoweredPlan, str]]:
+    """(plan, symbol) probes: const, variable-coefficient, and temporal."""
+    rng = np.random.default_rng(0)
+    specs = [s for s in paper_suite() if s.ndim <= 2]
+    for spec in specs:
+        for backend in ("direct", "gemm", "sptc"):
+            yield (lower_spec(spec, backend=backend),
+                   f"{spec.name}/{backend}")
+        # temporal blocking: k is an IR-level attribute, stages unchanged
+        yield (lower_spec(spec, backend="sptc", temporal_steps=2),
+               f"{spec.name}/sptc/k2")
+        # variable coefficients: small random field, star cross respected
+        out_shape = (6,) * spec.ndim
+        taps = 2 * spec.radius + 1
+        c = rng.normal(size=out_shape + (taps,) * spec.ndim)
+        if spec.shape == "star":
+            c[..., ~star_mask(spec.ndim, spec.radius)] = 0.0
+        for backend in ("gemm", "sptc"):
+            yield (lower_spec(spec, backend=backend, coefficients=c),
+                   f"{spec.name}/{backend}/var")
+        if spec.ndim == 2 and spec.shape != "star":
+            yield (lower_spec(spec, backend="sptc", fuse_rows=True),
+                   f"{spec.name}/sptc/fused")
+
+
 def run(cfg: VetConfig) -> List[Finding]:
     findings: List[Finding] = []
     for w, L, symbol in sweep_points(cfg):
         findings += verify_kernel(cfg, w, L, symbol)
+    for plan, symbol in plan_probes(cfg):
+        findings += check_lowered_plan(cfg, plan, symbol)
     return findings

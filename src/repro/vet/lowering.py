@@ -23,6 +23,11 @@ backward operand closure of every ``dot``:
   lowering-retrace        a fixed-shape engine traces more than once
                           across repeated calls (retracing hazard)
 
+Temporal-blocked probes scale every budget linearly in the block size k:
+a k-step engine must lower with exactly k dots per 1-D application and
+one window gather per step — the §3.3 zero-overhead profile holds *per
+step*, nothing amortizes into extra runtime addressing work.
+
 ``verdict()`` additionally returns the per-backend op counts (keyed by
 kernel name: ``stencil_gemm``, ``sptc_spmm``) that the CLI emits as the
 certified zero-overhead status.
@@ -52,10 +57,13 @@ BACKEND_KERNEL = {"gemm": "stencil_gemm", "sptc": "sptc_spmm"}
 OVERHEAD_OPS = ("gather", "transpose", "copy", "dynamic-slice",
                 "dynamic-update-slice")
 
-#: (spec ctor args, fuse_rows, probe input shape) — small, compile-fast
-PROBES: Tuple[Tuple[Tuple[str, int, int], bool, Tuple[int, ...]], ...] = (
-    (("star", 2, 1), False, (34, 34)),
-    (("box", 2, 1), True, (34, 34)),
+#: (spec ctor args, fuse_rows, temporal steps, probe input shape) —
+#: small, compile-fast; the k=2 probe certifies the per-step profile
+PROBES: Tuple[Tuple[Tuple[str, int, int], bool, int, Tuple[int, ...]],
+              ...] = (
+    (("star", 2, 1), False, 1, (34, 34)),
+    (("box", 2, 1), True, 1, (34, 34)),
+    (("star", 2, 1), False, 2, (36, 36)),
 )
 
 
@@ -116,19 +124,23 @@ def analyze_backend(cfg: VetConfig, backend: str
     per_probe: Dict[str, dict] = {}
     kernel = BACKEND_KERNEL.get(backend, backend)
     budget = cfg.lowering_budgets.get(backend, {})
-    for (shape_kind, ndim, radius), fused, probe_shape in PROBES:
+    for (shape_kind, ndim, radius), fused, steps, probe_shape in PROBES:
         spec = make_stencil(shape_kind, ndim, radius, seed=7)
-        symbol = f"{kernel}/{spec.name}{'/fused' if fused else ''}"
-        engine = StencilEngine(spec, backend=backend, fuse_rows=fused)
+        symbol = (f"{kernel}/{spec.name}{'/fused' if fused else ''}"
+                  f"{f'/k{steps}' if steps != 1 else ''}")
+        engine = StencilEngine(spec, backend=backend, fuse_rows=fused,
+                               temporal_steps=steps)
         report = lower_engine(engine, probe_shape)
         counts = hot_counts(report)
         per_probe[symbol] = counts
-        napps = n_applications(spec, fused)
+        # every budget scales linearly in the temporal block size: the
+        # zero-overhead profile must hold per step (§3.3)
+        napps = n_applications(spec, fused) * steps
         if counts["dot"] != napps:
             findings.append(_finding(
                 cfg, "lowering-dot-count", symbol,
-                f"expected {napps} dot(s) (one per 1-D application), "
-                f"lowered program has {counts['dot']}"))
+                f"expected {napps} dot(s) (one per 1-D application per "
+                f"step), lowered program has {counts['dot']}"))
         gather_budget = budget.get("gather", 1) * napps
         if counts["gather"] > gather_budget:
             findings.append(_finding(

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.engine import StencilEngine, apply_stencil
-from repro.core.stencil import make_stencil, paper_suite
+from repro.core.stencil import make_stencil, paper_suite, star_mask
 from repro.core.sptc import sptc_matmul, swap_rows
 from repro.core.sparsify import sparsify_stencil_kernel
 from repro.core.transform import kernel_matrix
@@ -122,3 +122,109 @@ def test_fused_rows_matches_unfused(backend, shape, r, rng):
     got = StencilEngine(spec, backend=backend, fuse_rows=True)(x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# variable coefficients: per-point weights through ONE shared 2:4 pattern
+# ---------------------------------------------------------------------------
+
+VAR_SWEEP = [("box", 1, 1), ("box", 1, 2), ("box", 1, 3),
+             ("star", 2, 1), ("star", 2, 2), ("star", 2, 3),
+             ("box", 2, 1), ("box", 2, 2), ("box", 2, 3)]
+
+
+def _rand_coefficients(spec, out_shape, rng):
+    """Random per-output-point kernel field, star cross honored."""
+    taps = 2 * spec.radius + 1
+    c = rng.normal(size=out_shape + (taps,) * spec.ndim)
+    if spec.shape == "star":
+        c[..., ~star_mask(spec.ndim, spec.radius)] = 0.0
+    return c
+
+
+def _var_ref(spec, x, c):
+    """numpy oracle: out[i] = sum_off c[i, off] * x[i + off]."""
+    r, d = spec.radius, spec.ndim
+    out_shape = tuple(s - 2 * r for s in x.shape)
+    out = np.zeros(out_shape)
+    for off in np.ndindex(*(2 * r + 1,) * d):
+        sl = tuple(slice(o, o + n) for o, n in zip(off, out_shape))
+        out += c[(slice(None),) * d + off] * x[sl]
+    return out
+
+
+@pytest.mark.parametrize("shape,ndim,r", VAR_SWEEP)
+def test_variable_coefficients_match_oracle(shape, ndim, r, rng):
+    """Radius sweep: every var-coeff backend == the per-point numpy oracle."""
+    spec = make_stencil(shape, ndim, r, seed=13)
+    dims = {1: (53,), 2: (13, 17)}[ndim]
+    c = _rand_coefficients(spec, dims, rng)
+    x = rng.normal(size=tuple(s + 2 * r for s in dims)).astype(np.float32)
+    want = _var_ref(spec, x, c)
+    for backend in ("direct", "gemm", "sptc"):
+        eng = StencilEngine(spec, backend=backend, coefficients=c)
+        got = np.asarray(eng(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{backend} {spec.name}")
+
+
+def test_variable_coefficients_reduce_to_constant(rng):
+    """A field replicating the spec's weights == the constant-kernel path."""
+    spec = make_stencil("star", 2, 2, seed=5)
+    dims = (12, 15)
+    c = np.broadcast_to(spec.weights, dims + spec.weights.shape).copy()
+    x = jnp.asarray(rng.normal(size=(16, 19)), jnp.float32)
+    want = apply_stencil(spec, x, backend="direct")
+    got = StencilEngine(spec, backend="sptc", coefficients=c)(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_variable_coefficient_engine_is_fixed_shape(rng):
+    spec = make_stencil("box", 2, 1, seed=3)
+    c = _rand_coefficients(spec, (10, 12), rng)
+    eng = StencilEngine(spec, backend="sptc", coefficients=c)
+    assert eng.plan_ir.sparsify.shared_pattern
+    eng(jnp.zeros((12, 14)))                     # the field's shape: fine
+    with pytest.raises(ValueError, match="fixed-shape"):
+        eng(jnp.zeros((13, 14)))
+
+
+# ---------------------------------------------------------------------------
+# temporal blocking: k fused steps in one compiled program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("shape,ndim,r", VAR_SWEEP)
+def test_temporal_block_matches_repeated_oracle(shape, ndim, r, k, rng):
+    """A k-step engine on a k·r-halo input == k repeated oracle sweeps."""
+    spec = make_stencil(shape, ndim, r, seed=17)
+    dims = {1: (45,), 2: (11, 13)}[ndim]
+    x = rng.normal(size=tuple(s + 2 * k * r for s in dims)).astype(np.float32)
+    want = x
+    for _ in range(k):
+        want = _ref(spec, want)
+    for backend in ("direct", "gemm", "sptc"):
+        eng = StencilEngine(spec, backend=backend, temporal_steps=k)
+        got = np.asarray(eng(jnp.asarray(x)))
+        assert got.shape == dims
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{backend} {spec.name} k={k}")
+
+
+def test_temporal_iterate_matches_blockwise_reference(rng):
+    """iterate() with temporal_steps=k: k raw applications per re-pad block."""
+    spec = make_stencil("star", 2, 1, seed=0)
+    k, steps = 2, 4
+    x = rng.uniform(0, 1, size=(20, 22)).astype(np.float32)
+    eng = StencilEngine(spec, backend="gemm", temporal_steps=k)
+    got = np.asarray(eng.iterate(jnp.asarray(x), steps=steps))
+    y = x
+    for _ in range(steps // k):
+        t = y
+        for _ in range(k):
+            t = _ref(spec, t)
+        y = np.pad(t, k * spec.radius)
+    np.testing.assert_allclose(got, y, rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="multiple"):
+        eng.iterate(jnp.asarray(x), steps=3)

@@ -78,6 +78,37 @@ def test_submit_validates_ndim_and_halo(rng):
             drv.submit(spec, jnp.zeros((8,)))
         with pytest.raises(ValueError, match="halo"):
             drv.submit(spec, jnp.zeros((2, 8)))
+        # a k-step job needs the k·r halo, and k must be positive
+        with pytest.raises(ValueError, match="2kr=4"):
+            drv.submit(spec, jnp.zeros((4, 8)), temporal_steps=2)
+        with pytest.raises(ValueError, match="temporal_steps"):
+            drv.submit(spec, jnp.zeros((8, 8)), temporal_steps=0)
+
+
+def test_temporal_jobs_bucket_and_run_separately(rng):
+    """temporal_steps extends the plan key: a k-step job never co-batches
+    with single-step jobs, and its result advances k steps."""
+    spec = make_stencil("star", 2, 1, seed=0)
+    cache = PlanCache()
+    x1 = _grid(spec, (20, 24), rng)                    # r halo
+    xk = jnp.asarray(rng.normal(size=(24, 28)), jnp.float32)   # 2·r halo
+    with StencilDriver(cache=cache, mode=MODE,
+                       policy=BatchPolicy(max_batch=4,
+                                          max_wait_ms=1.0)) as drv:
+        assert drv.group_key(spec, xk, temporal_steps=2) != \
+            drv.group_key(spec, xk)
+        f1 = drv.submit(spec, x1)
+        fk = drv.submit(spec, xk, temporal_steps=2)
+        y1, yk = f1.result(timeout=120), fk.result(timeout=120)
+    np.testing.assert_allclose(
+        np.asarray(y1),
+        np.asarray(tuned_apply(spec, x1, cache=cache, mode=MODE)),
+        rtol=2e-5, atol=2e-5)
+    want = apply_stencil(spec, apply_stencil(spec, xk, backend="direct"),
+                         backend="direct")
+    assert yk.shape == tuple(s - 4 * spec.radius for s in xk.shape)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

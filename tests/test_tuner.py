@@ -5,6 +5,8 @@ dtype) must hit the plan cache with zero re-trace/re-jit; persistence
 must round-trip through the JSON file; and every tuned plan must stay
 numerically equal to the `direct` backend oracle across paper_suite().
 """
+import json
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,7 +17,7 @@ from repro.kernels.dispatch import applicable_backends
 from repro.tuner import (Plan, PlanCache, autotune, candidate_plans, plan_for,
                          plan_key, shape_bucket, spec_fingerprint, static_cost,
                          tuned_apply, tuned_apply_batched)
-from repro.tuner.plan import PlanKey
+from repro.tuner.plan import PLAN_SCHEMA, PlanKey
 
 
 def _x(spec, dims, rng, dtype=jnp.float32):
@@ -142,8 +144,126 @@ def test_plan_persistence_roundtrip(tmp_path, rng):
 def test_persistence_ignores_corrupt_file(tmp_path):
     path = tmp_path / "plans.json"
     path.write_text("{not json")
-    cache = PlanCache(path=path)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        cache = PlanCache(path=path)
     assert len(cache) == 0 and cache.stats.loads == 0
+
+
+# ---------------------------------------------------------------------------
+# schema forward/backward compatibility (PR-8 satellite)
+# ---------------------------------------------------------------------------
+
+def test_plan_from_dict_tolerates_unknown_and_missing_fields():
+    d = Plan(backend="gemm", L=4).to_dict()
+    d["novel_future_knob"] = 123                 # unknown: ignored
+    assert Plan.from_dict(d) == Plan(backend="gemm", L=4)
+    legacy = {"backend": "sptc", "L": 8}         # schema-1: fields default
+    p = Plan.from_dict(legacy)
+    assert p == Plan(backend="sptc", L=8, fuse_rows=False,
+                     star_fast_path=True, temporal_steps=1)
+    with pytest.raises(ValueError, match="schema"):
+        Plan.from_dict({"schema": PLAN_SCHEMA + 1, "backend": "gemm", "L": 4})
+
+
+def test_plan_key_decodes_v1_and_tolerates_unknown_fields():
+    key = PlanKey(spec_fp="abc", bucket=(64, 32), dtype="float32",
+                  device="cpu")
+    legacy = "spec=abc;shape=64x32;dtype=float32;dev=cpu"
+    assert PlanKey.decode(legacy) == key         # v1: coeff/steps default
+    assert PlanKey.decode(key.encode() + ";future=knob") == key
+    with pytest.raises(ValueError, match="newer"):
+        PlanKey.decode(f"v{PLAN_SCHEMA + 1};" + legacy)
+    with pytest.raises(ValueError, match="prefix"):
+        PlanKey.decode("garbage")
+
+
+def test_plan_key_splits_on_coeff_and_steps():
+    spec = make_stencil("box", 2, 1, seed=1)
+    base = plan_key(spec, (20, 20), jnp.float32)
+    assert base.coeff == "const" and base.steps == 1
+    k2 = plan_key(spec, (20, 20), jnp.float32, temporal_steps=2)
+    c = np.ones((18, 18, 3, 3))
+    var = plan_key(spec, (20, 20), jnp.float32, coefficients=c)
+    assert len({base.encode(), k2.encode(), var.encode()}) == 3
+    assert var.coeff.startswith("var-")
+
+
+def test_pre_pr8_cache_file_round_trips(tmp_path, rng):
+    """A v1 cache file (unversioned keys, schema-1 plans) still hits —
+    ``tuned_apply`` must not retune against a pre-PR-8 persisted cache."""
+    spec = make_stencil("box", 2, 1, seed=5)
+    x = _x(spec, (22, 26), rng)
+    key = plan_key(spec, x.shape, x.dtype)
+    legacy_key = (f"spec={key.spec_fp};"
+                  f"shape={'x'.join(str(s) for s in key.bucket)};"
+                  f"dtype={key.dtype};dev={key.device}")
+    legacy_plan = {"backend": "gemm", "L": 4, "fuse_rows": False,
+                   "star_fast_path": True}
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 1,
+                                "plans": {legacy_key: legacy_plan}}))
+    cache = PlanCache(path=path)
+    assert len(cache) == 1 and cache.stats.loads == 1
+    got = tuned_apply(spec, x, cache=cache, mode="cost")
+    assert cache.stats.tunes == 0                # the legacy entry hit
+    want = apply_stencil(spec, x, backend="direct")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cache_skips_corrupt_and_future_entries_with_warning(tmp_path):
+    spec = make_stencil("box", 1, 1, seed=2)
+    good_key = plan_key(spec, (40,), jnp.float32).encode()
+    payload = {"version": 2, "plans": {
+        good_key: Plan(backend="gemm", L=4).to_dict(),
+        "garbage-key": Plan(backend="gemm", L=4).to_dict(),
+        f"v{PLAN_SCHEMA + 1};{good_key}": Plan(backend="gemm", L=4).to_dict(),
+        good_key.replace("steps=1", "steps=2"):
+            {"schema": PLAN_SCHEMA + 1, "backend": "gemm", "L": 4},
+    }}
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps(payload))
+    with pytest.warns(RuntimeWarning, match="skipping entry"):
+        cache = PlanCache(path=path)
+    assert len(cache) == 1 and cache.stats.skipped_entries == 3
+    assert cache.lookup(plan_key(spec, (40,), jnp.float32)) is not None
+
+
+def test_future_versioned_file_is_ignored_whole(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps({"version": 99, "plans": {}}))
+    with pytest.warns(RuntimeWarning, match="version"):
+        cache = PlanCache(path=path)
+    assert len(cache) == 0 and cache.stats.loads == 0
+
+
+def test_save_merges_concurrent_writers(tmp_path):
+    """Two caches sharing one file converge on the union of their plans."""
+    path = tmp_path / "plans.json"
+    spec_a = make_stencil("box", 1, 1, seed=3)
+    spec_b = make_stencil("box", 1, 2, seed=4)
+    key_a = plan_key(spec_a, (40,), jnp.float32)
+    key_b = plan_key(spec_b, (40,), jnp.float32)
+    cache_a = PlanCache(path=path)
+    cache_b = PlanCache(path=path)
+    cache_a.store(key_a, Plan(backend="gemm", L=4))      # writes the file
+    cache_b.store(key_b, Plan(backend="sptc", L=6))      # merges, then writes
+    assert len(cache_b) == 2 and cache_b.stats.merges == 1
+    fresh = PlanCache(path=path)
+    assert len(fresh) == 2
+    assert fresh.lookup(key_a) == Plan(backend="gemm", L=4)
+    assert fresh.lookup(key_b) == Plan(backend="sptc", L=6)
+
+
+def test_save_conflicts_prefer_memory(tmp_path):
+    path = tmp_path / "plans.json"
+    spec = make_stencil("box", 1, 1, seed=3)
+    key = plan_key(spec, (40,), jnp.float32)
+    cache_a = PlanCache(path=path)
+    cache_b = PlanCache(path=path)
+    cache_a.store(key, Plan(backend="gemm", L=4))
+    cache_b.store(key, Plan(backend="sptc", L=6))        # same key: b wins b's
+    assert PlanCache(path=path).lookup(key) == Plan(backend="sptc", L=6)
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +297,41 @@ def test_every_candidate_plan_matches_direct(rng):
 # ---------------------------------------------------------------------------
 # batched execution
 # ---------------------------------------------------------------------------
+
+def test_tuned_apply_temporal_matches_repeated_direct(rng):
+    spec = make_stencil("star", 2, 1, seed=12)
+    x = _x(spec, (20, 22), rng)                  # dims + 2r; k=2 needs 2·(2r)
+    x = jnp.asarray(np.pad(np.asarray(x), spec.radius))
+    cache = PlanCache()
+    got = tuned_apply(spec, x, cache=cache, mode="cost", temporal_steps=2)
+    want = apply_stencil(spec, apply_stencil(spec, x, backend="direct"),
+                         backend="direct")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # the k=2 plan keys separately from the single-step plan
+    assert cache.stats.tunes == 1
+    tuned_apply(spec, x, cache=cache, mode="cost")
+    assert cache.stats.tunes == 2
+
+
+def test_tuned_apply_variable_coefficients(rng):
+    from repro.core.engine import StencilEngine
+    spec = make_stencil("box", 2, 1, seed=13)
+    dims = (10, 12)
+    c = rng.normal(size=dims + (3, 3))
+    x = jnp.asarray(rng.normal(size=(12, 14)), jnp.float32)
+    cache = PlanCache()
+    got = tuned_apply(spec, x, cache=cache, mode="cost", coefficients=c)
+    want = StencilEngine(spec, backend="direct", coefficients=c)(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # var plans tune per content fingerprint, apart from the const plan
+    assert cache.stats.tunes == 1
+    tuned_apply(spec, x, cache=cache, mode="cost", coefficients=c)
+    assert cache.stats.tunes == 1                # same field: cache hit
+    tuned_apply(spec, x, cache=cache, mode="cost")
+    assert cache.stats.tunes == 2                # const plan is separate
+
 
 def test_batched_matches_per_instance(rng):
     spec = make_stencil("star", 2, 1, seed=7)
