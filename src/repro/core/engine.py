@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core.ir import (BACKENDS, LoweredPlan, RowOp,
                            SegmentGatherSchedule)
-from repro.core.sparsify import decode_24, sparsify_stencil_kernel
+from repro.core.sparsify import Sparse24, decode_24, sparsify_stencil_kernel
 from repro.core.stencil import StencilSpec
 from repro.core.transform import default_l, kernel_matrix, lower_spec
 
@@ -129,14 +129,15 @@ def _op_pallas_mxu(K: np.ndarray, x2d: jnp.ndarray, n_out: int,
     return y.reshape(ntiles * L, -1)[:n_out]
 
 
-def _op_pallas_sptc(values: np.ndarray, meta: np.ndarray, perm: np.ndarray,
-                    x2d: jnp.ndarray, n_out: int, L: int) -> jnp.ndarray:
-    from repro.kernels.sptc_spmm.ops import sptc_spmm_windows
-    win, ntiles = _windows(x2d, n_out, L)
-    win = win[:, np.asarray(perm), :]             # zero-cost row swap (§3.3)
-    y = sptc_spmm_windows(jnp.asarray(values, dtype=x2d.dtype),
-                          jnp.asarray(meta), win)
-    return y.reshape(ntiles * L, -1)[:n_out]
+def _op_pallas_sptc(operand: Sparse24, perm: np.ndarray, x2d: jnp.ndarray,
+                    n_out: int, L: int, star_fast: bool) -> jnp.ndarray:
+    """Fused v2: ONE Pallas program — window DMA, in-kernel swap+segment
+    gather (from the packed meta_bits), MXU matmul.  Nothing is windowed,
+    permuted, or gathered outside the kernel (§3.3 zero runtime overhead;
+    certified by ``repro.vet``'s pallas-fused analyzer)."""
+    from repro.kernels.sptc_spmm.ops import sptc_spmm_fused
+    return sptc_spmm_fused(operand, perm, x2d, n_out=n_out, L=L,
+                           star_fast="auto" if star_fast else False)
 
 
 # ---------------------------------------------------------------------------
@@ -224,8 +225,11 @@ def _apply_op(plan: LoweredPlan, op: RowOp, x: jnp.ndarray, n_out: int,
     elif backend == "pallas_sptc":
         sp = plan.sparsify
         assert sp is not None
-        y = _op_pallas_sptc(sp.operands[i].values, sp.operands[i].meta,
-                            sp.perm, x2d, n_out, L)
+        # the metadata-free banded path is the star decomposition's fast
+        # path; box "rows" ops keep the faithful one-hot decompression
+        star = plan.decompose.mode in ("single", "star-axis")
+        y = _op_pallas_sptc(sp.operands[i], sp.perm, x2d, n_out, L,
+                            star_fast=star)
     else:
         raise ValueError(f"unknown 1-D backend {backend}")
     return jnp.moveaxis(y.reshape((n_out,) + rest), 0, axis)
@@ -502,7 +506,8 @@ def apply_1d(w: np.ndarray, x: jnp.ndarray, n_out: int, axis: int,
                            n_out, L)
     elif backend == "pallas_sptc":
         sk = sparsify_stencil_kernel(w, L=L)
-        y = _op_pallas_sptc(sk.values, sk.meta, sk.perm, x2d, n_out, L)
+        y = _op_pallas_sptc(sk.sparse, sk.perm, x2d, n_out, L,
+                            star_fast=True)
     else:
         raise ValueError(f"unknown 1-D backend {backend}")
     return jnp.moveaxis(y.reshape((n_out,) + rest), 0, axis)

@@ -144,6 +144,35 @@ def decode_24(sp: Sparse24) -> np.ndarray:
     return out
 
 
+def contiguous_band_values(sp: Sparse24, perm: np.ndarray) -> "np.ndarray | None":
+    """Banded re-layout of a compressed operand, or None if not banded.
+
+    When the composed gather ``comb[m, j] = perm[4*seg(j) + meta[m, j]]``
+    is the identity band of the taps — every non-zero slot of row ``m``
+    reads input row ``m + off`` with ``0 <= off < K/2`` — the 2:4 pattern
+    carries no information beyond the band structure, and the kernel can
+    skip the one-hot decompression entirely: it needs only the values
+    re-laid-out by offset, ``out[m, off] = values[m, j]``.  This is the
+    star-shape fast path (the swap∘meta permutation is the identity on
+    the star taps); it holds for every banded (L, 2L) kernel matrix the
+    stencil pipeline produces, and fails (returns None) for any operand
+    whose pattern escapes the band.
+    """
+    comb = np.asarray(perm)[sp.gather_indices()]
+    m, kh = sp.values.shape
+    out = np.zeros_like(np.asarray(sp.values))
+    for i in range(m):
+        for j in range(kh):
+            v = sp.values[i, j]
+            if v == 0:
+                continue
+            off = comb[i, j] - i
+            if not 0 <= off < kh:
+                return None
+            out[i, off] += v
+    return out
+
+
 def sparsify_matrices(mats: "tuple[np.ndarray, ...] | list[np.ndarray]",
                       L: int) -> "tuple[np.ndarray, tuple[Sparse24, ...], bool]":
     """Strided-swap + 2:4-encode a family of (L, 2L) kernel matrices.

@@ -1,7 +1,14 @@
 """Shared kernel utilities."""
 from __future__ import annotations
 
+import os
+
 import jax
+
+#: env override for interpret-mode resolution: "1" forces interpret=True
+#: everywhere (correctness sweeps on any backend), "0" forces compiled
+#: Mosaic lowering (only meaningful on a real TPU).
+INTERPRET_ENV_VAR = "REPRO_PALLAS_INTERPRET"
 
 
 def default_interpret() -> bool:
@@ -9,8 +16,13 @@ def default_interpret() -> bool:
 
     This container is CPU-only; TPU v5e is the *target*. interpret=True
     executes the kernel body in Python for bit-level validation against the
-    ref.py oracles; on TPU the same pallas_call lowers to Mosaic.
+    ref.py oracles; on TPU the same pallas_call lowers to Mosaic.  The
+    ``REPRO_PALLAS_INTERPRET`` env var overrides the device-based default
+    in either direction (read at call resolution time, not import time).
     """
+    env = os.environ.get(INTERPRET_ENV_VAR, "")
+    if env:
+        return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
 
 

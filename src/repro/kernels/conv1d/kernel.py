@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _conv_kernel(x_hbm, w_ref, y_ref, scratch, sem, *, k, bt):
     b = pl.program_id(0)
@@ -37,8 +39,7 @@ def _conv_kernel(x_hbm, w_ref, y_ref, scratch, sem, *, k, bt):
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def conv1d_causal_call(x, w, *, block_t: int = 256, interpret: bool = True):
-    """x (B, T, D); w (K, D) -> (B, T, D). D must be lane-padded by caller."""
+def _conv1d_jit(x, w, *, block_t: int, interpret: bool):
     bsz, t, d = x.shape
     k = w.shape[0]
     bt = min(block_t, t)
@@ -61,3 +62,11 @@ def conv1d_causal_call(x, w, *, block_t: int = 256, interpret: bool = True):
         interpret=interpret,
     )(x, w.astype(x.dtype))
     return y[:, :t, :]
+
+
+def conv1d_causal_call(x, w, *, block_t: int = 256,
+                       interpret: bool | None = None):
+    """x (B, T, D); w (K, D) -> (B, T, D). D must be lane-padded by caller."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    return _conv1d_jit(x, w, block_t=block_t, interpret=interpret)

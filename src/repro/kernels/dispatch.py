@@ -14,6 +14,7 @@ import os
 from typing import Callable, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.stencil import StencilSpec
@@ -22,12 +23,25 @@ JNP_BACKENDS = ("direct", "gemm", "sptc")
 PALLAS_BACKENDS = ("pallas_direct", "pallas_mxu", "pallas_sptc")
 
 
+def backend_universe(device: str | None = None) -> str:
+    """Provenance tag for the candidate universe tuning ran against.
+
+    Recorded in the tuner plan key so plans tuned with the Pallas
+    backends forced in (``REPRO_TUNER_INCLUDE_PALLAS=1`` correctness
+    sweeps — interpret mode, Python speed) can never be served as
+    winning plans to a plain-CPU process, and vice versa.
+    """
+    device = device if device is not None else jax.default_backend()
+    if device == "tpu" or os.environ.get("REPRO_TUNER_INCLUDE_PALLAS") == "1":
+        return "jnp+pallas"
+    return "jnp"
+
+
 def applicable_backends(spec: StencilSpec,
                         device: str | None = None) -> Tuple[str, ...]:
     """Backends able to execute ``spec`` on ``device`` (default: current)."""
-    device = device if device is not None else jax.default_backend()
     out = list(JNP_BACKENDS)
-    if device == "tpu" or os.environ.get("REPRO_TUNER_INCLUDE_PALLAS") == "1":
+    if backend_universe(device) == "jnp+pallas":
         out.extend(PALLAS_BACKENDS)
     return tuple(out)
 
@@ -57,5 +71,8 @@ def build(spec: StencilSpec, backend: str, L: int) -> Callable:
                 continue
             part = jax.vmap(lambda s, wu=w[u]: stencil2d(wu, s))(x[u:u + n1])
             acc = part if acc is None else acc + part
+        if acc is None:       # all-zero kernel: every slab skipped
+            out_shape = (n1,) + tuple(s - 2 * r for s in x.shape[1:])
+            return jnp.zeros(out_shape, dtype=x.dtype)
         return acc
     return fn3d

@@ -1,15 +1,44 @@
-"""Pallas TPU kernel: 2:4-compressed SpMM (simulated Sparse Tensor Core).
+"""Pallas TPU kernels: 2:4-compressed SpMM (simulated Sparse Tensor Core).
 
-Faithful executable semantics of ``mma.sp``: per output row i and 4-wide
-reduction segment s, only the two RHS rows selected by the 2-bit metadata
-contribute. TPU has no SpTC, so the kernel realizes the selection as an
-in-VMEM decompression (VPU one-hot expansion over the tiny K dim — the
-metadata is typically static stencil structure) followed by a dense MXU
-matmul over the N (free) dimension, which is where the FLOPs are.
+Two entry points:
 
-Blocking: the compressed operand (M, K/2) and metadata are tiny (M = L =
-2r+2, K = 2L) and live whole in VMEM; the RHS/output are tiled over N in
-128-lane multiples — BlockSpec (K, bn) / (M, bn).
+``sptc_spmm_call`` — the v1 building block: a plain compressed SpMM over a
+pre-swapped RHS.  Faithful executable semantics of ``mma.sp``: per output
+row i and 4-wide reduction segment s, only the two RHS rows selected by
+the 2-bit metadata contribute.  TPU has no SpTC, so the kernel realizes
+the selection as an in-VMEM decompression (VPU one-hot expansion over the
+tiny K dim) followed by a dense MXU matmul over the N (free) dimension.
+
+``sptc_fused_call`` — the v2 fused stencil executor (paper §3.3 "zero
+runtime overhead"): ONE Pallas program that, per (N-tile, row-tile) grid
+step,
+
+  1. DMAs the overlapping (2L, bn) input window straight from HBM into
+     VMEM scratch, double-buffered across sequential grid steps (the
+     t+1 window prefetches while tile t computes);
+  2. folds the strided row swap AND the 2-bit metadata gather into the
+     decompression's comparison positions — the swap permutation is the
+     closed form ``p odd: p <-> p±L`` so it is derived from an iota
+     inside the kernel, and the metadata is unpacked in-register from
+     the packed ``meta_bits`` words.  Nothing is permuted or gathered
+     outside the kernel;
+  3. runs the dense MXU matmul (f32, or bf16 inputs with f32
+     accumulation via ``compute_dtype="bfloat16"``).
+
+Star fast path (``star_fast=True``): when the composed swap∘meta gather
+is the identity band of the taps (see ``core.sparsify
+.contiguous_band_values``), the metadata carries no information — the
+kernel skips the one-hot decompression and performs K/2 shifted VPU FMAs
+over the banded value layout, touching no metadata at all.
+
+Blocking: the compressed operand (M = L, K/2) and metadata words are tiny
+and live whole in VMEM; the input stays in HBM (``pl.ANY``) because the
+overlapping 2L-row windows cannot be expressed as disjoint BlockSpec
+tiles; outputs are tiled (L, bn) with N in 128-lane multiples.
+
+Both ``*_call`` entry points resolve ``interpret=None`` through
+``common.default_interpret()`` at call time: compiled Mosaic on a real
+TPU, interpret mode elsewhere, overridable via ``REPRO_PALLAS_INTERPRET``.
 """
 from __future__ import annotations
 
@@ -18,7 +47,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
 from repro.kernels.common import round_up
 
 
@@ -40,9 +71,7 @@ def _sptc_kernel(values_ref, meta_ref, x_ref, y_ref, *, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def sptc_spmm_call(values, meta, x, *, block_n: int = 512,
-                   interpret: bool = True):
-    """y = SpTC(values, meta) @ x.   values/meta: (M, K/2); x: (K, N)."""
+def _sptc_spmm_jit(values, meta, x, *, block_n: int, interpret: bool):
     m, kh = values.shape
     k, n = x.shape
     if kh * 2 != k:
@@ -65,3 +94,135 @@ def sptc_spmm_call(values, meta, x, *, block_n: int = 512,
         interpret=interpret,
     )(values.astype(x.dtype), meta.astype(jnp.int32), x)
     return y[:, :n]
+
+
+def sptc_spmm_call(values, meta, x, *, block_n: int = 512,
+                   interpret: bool | None = None):
+    """y = SpTC(values, meta) @ x.   values/meta: (M, K/2); x: (K, N)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    return _sptc_spmm_jit(values, meta, x, block_n=block_n,
+                          interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# v2: fused window-DMA + in-kernel swap/gather + MXU matmul
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(x_hbm, vals_ref, meta_ref, y_ref, scratch, sem, *,
+                  tiles: int, L: int, bn: int, star_fast: bool, compute):
+    t = pl.program_id(1)
+    j = pl.program_id(0)
+    kh = vals_ref.shape[1]
+
+    def dma(slot, tt):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(tt * L, 2 * L), pl.ds(j * bn, bn)],
+            scratch.at[slot], sem.at[slot])
+
+    # cross-grid-step double buffering: scratch persists across the
+    # sequential row-tile axis (grid iterates it fastest), so tile t+1's
+    # window streams from HBM while tile t computes.
+    @pl.when(t == 0)
+    def _():
+        dma(0, 0).start()
+
+    @pl.when(t + 1 < tiles)
+    def _():
+        dma((t + 1) % 2, t + 1).start()
+
+    dma(t % 2, t).wait()
+    win = scratch[t % 2]                     # (2L, bn)
+    vals = vals_ref[:]                       # (M, K/2)
+    if compute is not None:
+        win = win.astype(compute)
+        vals = vals.astype(compute)
+    if star_fast:
+        # banded value layout: row m's slot off reads window row m + off —
+        # no metadata, K/2 shifted VPU FMAs with f32 accumulation.
+        acc = jnp.zeros((L, bn), dtype=jnp.float32)
+        for jj in range(kh):
+            acc = acc + vals[:, jj:jj + 1].astype(jnp.float32) * \
+                win[jj:jj + L, :].astype(jnp.float32)
+        y_ref[:] = acc.astype(y_ref.dtype)
+    else:
+        # unpack the 2-bit metadata from the packed words in-register
+        words = meta_ref[:]                  # (M, nwords) uint32
+        m = words.shape[0]
+        nwords = words.shape[1]
+        exp = jnp.concatenate(
+            [jnp.broadcast_to(words[:, w:w + 1], (m, 16))
+             for w in range(nwords)], axis=1)[:, :kh]
+        jj = jax.lax.broadcasted_iota(jnp.int32, (m, kh), 1)
+        shifts = (2 * (jj % 16)).astype(jnp.uint32)
+        meta = (jax.lax.shift_right_logical(exp, shifts) & 3
+                ).astype(jnp.int32)
+        gidx = 4 * (jj // 2) + meta                            # (M, K/2)
+        # strided swap folded into the decompression positions: position p
+        # of the window holds source row perm[p], and the permutation has
+        # the closed form "odd p exchanges halves" — derived from an iota,
+        # so the swap costs zero loads and zero stores (§3.3).
+        p = jax.lax.broadcasted_iota(jnp.int32, (m, kh, 2 * L), 2)
+        kpos = jnp.where(p % 2 == 1, jnp.where(p < L, p + L, p - L), p)
+        onehot = (gidx[:, :, None] == kpos)
+        w_dense = jnp.sum(vals[:, :, None] * onehot.astype(vals.dtype),
+                          axis=1)                              # (M, 2L)
+        y_ref[:] = jnp.dot(w_dense, win, preferred_element_type=jnp.float32
+                           ).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_out", "L", "block_n", "star_fast", "compute_dtype", "interpret"))
+def _sptc_fused_jit(values, meta_bits, x2d, *, n_out: int, L: int,
+                    block_n: int, star_fast: bool, compute_dtype,
+                    interpret: bool):
+    rows, c = x2d.shape
+    m, kh = values.shape
+    tiles = -(-n_out // L)
+    need = (tiles + 1) * L
+    if need > rows:
+        x2d = jnp.pad(x2d, ((0, need - rows), (0, 0)))
+    bn = min(block_n, round_up(c, 128))
+    c_pad = round_up(c, bn)
+    if c_pad != c:
+        x2d = jnp.pad(x2d, ((0, 0), (0, c_pad - c)))
+    compute = jnp.dtype(compute_dtype) if compute_dtype else None
+    kern = functools.partial(_fused_kernel, tiles=tiles, L=L, bn=bn,
+                             star_fast=star_fast, compute=compute)
+    y = pl.pallas_call(
+        kern,
+        grid=(c_pad // bn, tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),             # input in HBM
+            pl.BlockSpec((m, kh), lambda j, t: (0, 0)),
+            pl.BlockSpec(meta_bits.shape, lambda j, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((L, bn), lambda j, t: (t, j)),
+        out_shape=jax.ShapeDtypeStruct((tiles * L, c_pad), x2d.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, 2 * L, bn), x2d.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(x2d, values, meta_bits)
+    return y[:n_out, :c]
+
+
+def sptc_fused_call(values, meta_bits, x2d, *, n_out: int, L: int,
+                    block_n: int = 512, star_fast: bool = False,
+                    compute_dtype: str | None = None,
+                    interpret: bool | None = None):
+    """Fused stencil SpMM: y[i] = sum_j band(i, j) * x2d[i + ...].
+
+    ``values``    (L, K/2) compressed operand — the banded layout from
+                  ``contiguous_band_values`` when ``star_fast=True``.
+    ``meta_bits`` (L, ceil(K/32)) packed uint32 metadata words.
+    ``x2d``       (>= n_out + L, C) input rows, UNswapped — the swap
+                  happens inside the kernel.
+    Returns the (n_out, C) stencil output.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    return _sptc_fused_jit(values, meta_bits, x2d, n_out=n_out, L=L,
+                           block_n=block_n, star_fast=star_fast,
+                           compute_dtype=compute_dtype, interpret=interpret)

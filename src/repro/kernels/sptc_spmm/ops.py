@@ -1,18 +1,20 @@
-"""Jitted public wrappers for the 2:4 compressed SpMM kernel."""
+"""Jitted public wrappers for the 2:4 compressed SpMM kernels."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels import common
-from repro.kernels.sptc_spmm.kernel import sptc_spmm_call
+from repro.core.sparsify import (Sparse24, contiguous_band_values,
+                                 strided_swap_perm)
+from repro.kernels.sptc_spmm.kernel import sptc_fused_call, sptc_spmm_call
 
 
 def sptc_spmm(values, meta, x, *, block_n: int = 512,
               interpret: bool | None = None):
     """Compressed (M, K/2) x (K, N) -> (M, N)."""
-    if interpret is None:
-        interpret = common.default_interpret()
     return sptc_spmm_call(jnp.asarray(values), jnp.asarray(meta),
                           jnp.asarray(x), block_n=block_n,
                           interpret=interpret)
@@ -24,10 +26,46 @@ def sptc_spmm_windows(values, meta, windows, *, block_n: int = 512,
 
     vmap adds the tile axis as an outer grid dimension of the pallas_call.
     """
-    if interpret is None:
-        interpret = common.default_interpret()
     values = jnp.asarray(values)
     meta = jnp.asarray(meta)
     fn = lambda w: sptc_spmm_call(values, meta, w, block_n=block_n,
                                   interpret=interpret)
     return jax.vmap(fn)(jnp.asarray(windows))
+
+
+def sptc_spmm_fused(operand: Sparse24, perm, x2d, *, n_out: int, L: int,
+                    star_fast: "bool | str" = "auto", block_n: int = 512,
+                    compute_dtype: Optional[str] = None,
+                    interpret: bool | None = None):
+    """One fused Pallas program: window DMA → in-kernel swap+gather → MXU.
+
+    ``x2d`` is the raw (n_out + 2r, C) haloed input — NOT windowed, NOT
+    swapped; the kernel folds both into its load addressing (§3.3).  All
+    tables (compressed values, packed meta words, the fast-path banded
+    layout) are computed here in NumPy at trace time, so under ``jax.jit``
+    they are compile-time constants: slight compile time, zero runtime.
+
+    ``star_fast``: ``"auto"`` uses the metadata-free banded path whenever
+    the swap∘meta gather is the identity band of the taps; ``True``
+    requires it (ValueError if the operand's pattern escapes the band);
+    ``False`` always runs the faithful one-hot decompression.
+    """
+    perm = np.asarray(perm)
+    if not np.array_equal(perm, strided_swap_perm(L)):
+        raise ValueError(
+            "sptc_spmm_fused requires the strided-swap permutation — the "
+            "kernel derives it in closed form from an iota (§3.3)")
+    fast_vals = (contiguous_band_values(operand, perm)
+                 if star_fast in ("auto", True) else None)
+    if star_fast is True and fast_vals is None:
+        raise ValueError("operand's 2:4 pattern is not the identity band "
+                         "of the taps; star fast path unavailable")
+    x2d = jnp.asarray(x2d)
+    meta_bits = jnp.asarray(operand.meta_bits())
+    vals = np.asarray(fast_vals if fast_vals is not None
+                      else operand.values)
+    return sptc_fused_call(
+        jnp.asarray(vals, dtype=x2d.dtype), meta_bits, x2d,
+        n_out=n_out, L=L, block_n=block_n,
+        star_fast=fast_vals is not None,
+        compute_dtype=compute_dtype, interpret=interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _stencil_kernel(x_hbm, y_ref, scratch, sem, *, taps, th, w_out, rh, rw):
     i = pl.program_id(0)
@@ -38,13 +40,7 @@ def _stencil_kernel(x_hbm, y_ref, scratch, sem, *, taps, th, w_out, rh, rw):
 
 @functools.partial(jax.jit,
                    static_argnames=("taps", "rh", "rw", "th", "interpret"))
-def stencil2d_call(x, *, taps, rh: int, rw: int, th: int = 128,
-                   interpret: bool = True):
-    """Apply a 2-D stencil. x: (H + 2rh, W + 2rw) -> (H, W).
-
-    ``taps`` is a static tuple of (u, v, weight) non-zero stencil entries.
-    Caller is responsible for lane padding of W (ops.py handles it).
-    """
+def _stencil2d_jit(x, *, taps, rh: int, rw: int, th: int, interpret: bool):
     h_in, w_in = x.shape
     h_out = h_in - 2 * rh
     w_out = w_in - 2 * rw
@@ -67,3 +63,16 @@ def stencil2d_call(x, *, taps, rh: int, rw: int, th: int = 128,
         interpret=interpret,
     )(x)
     return y[:h_out]
+
+
+def stencil2d_call(x, *, taps, rh: int, rw: int, th: int = 128,
+                   interpret: bool | None = None):
+    """Apply a 2-D stencil. x: (H + 2rh, W + 2rw) -> (H, W).
+
+    ``taps`` is a static tuple of (u, v, weight) non-zero stencil entries.
+    Caller is responsible for lane padding of W (ops.py handles it).
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    return _stencil2d_jit(x, taps=taps, rh=rh, rw=rw, th=th,
+                          interpret=interpret)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import common
 from repro.kernels.common import round_up
 
 
@@ -28,9 +29,7 @@ def _gemm_kernel(km_ref, win_ref, y_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def windows_gemm_call(km, windows, *, block_n: int = 512,
-                      interpret: bool = True):
-    """km (L, K); windows (T, K, C) -> (T, L, C)."""
+def _windows_gemm_jit(km, windows, *, block_n: int, interpret: bool):
     l, k = km.shape
     t, k2, c = windows.shape
     if k2 != k:
@@ -51,3 +50,12 @@ def windows_gemm_call(km, windows, *, block_n: int = 512,
         interpret=interpret,
     )(km.astype(windows.dtype), windows)
     return y[:, :, :c]
+
+
+def windows_gemm_call(km, windows, *, block_n: int = 512,
+                      interpret: bool | None = None):
+    """km (L, K); windows (T, K, C) -> (T, L, C)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    return _windows_gemm_jit(km, windows, block_n=block_n,
+                             interpret=interpret)

@@ -32,7 +32,11 @@ from repro.core.transform import default_l
 #: serialization schema for Plan dicts and PlanKey strings.
 #:   1  (implicit) backend/L/fuse_rows/star_fast_path; unversioned keys
 #:   2  + temporal_steps on Plan; versioned keys + coeff/steps fields
-PLAN_SCHEMA = 2
+#:   3  + univ (backend-universe provenance) on PlanKey — plans tuned
+#:      with the Pallas backends forced in (REPRO_TUNER_INCLUDE_PALLAS
+#:      interpret-mode sweeps) key separately from plain-jnp tuning, so
+#:      they can never poison a shared cache on CPU
+PLAN_SCHEMA = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,17 +130,24 @@ class PlanKey:
     device: str
     coeff: str = "const"       # "const" | "var-<fingerprint>"
     steps: int = 1             # temporal block size the plan targets
+    univ: str = "jnp"          # candidate universe: "jnp" | "jnp+pallas"
 
     def encode(self) -> str:
         """Stable string form used as the JSON dict key (schema-prefixed)."""
         shape = "x".join(str(s) for s in self.bucket)
         return (f"v{PLAN_SCHEMA};spec={self.spec_fp};shape={shape};"
                 f"dtype={self.dtype};dev={self.device};"
-                f"coeff={self.coeff};steps={int(self.steps)}")
+                f"coeff={self.coeff};steps={int(self.steps)};"
+                f"univ={self.univ}")
 
     @classmethod
     def decode(cls, s: str) -> "PlanKey":
-        """Decode v1 (unversioned) or v2 keys; tolerate unknown fields.
+        """Decode v1 (unversioned), v2 or v3 keys; tolerate unknown fields.
+
+        Keys older than v3 carry no universe field and decode as
+        ``univ="jnp"`` — pre-existing caches were tuned over the jnp
+        universe unless the sweep env forced Pallas in, which is exactly
+        the poisoning case v3 exists to fence off.
 
         Raises ValueError on a future-versioned or structurally corrupt
         key — the cache loader turns that into a warn-and-skip.
@@ -158,17 +169,20 @@ class PlanKey:
         return cls(spec_fp=parts["spec"], bucket=bucket,
                    dtype=parts["dtype"], device=parts["dev"],
                    coeff=parts.get("coeff", "const"),
-                   steps=int(parts.get("steps", 1)))
+                   steps=int(parts.get("steps", 1)),
+                   univ=parts.get("univ", "jnp"))
 
 
 def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype: Any,
              device: str | None = None, *,
              coefficients: Optional[Any] = None,
              temporal_steps: int = 1) -> PlanKey:
+    from repro.kernels.dispatch import backend_universe
     coeff = ("const" if coefficients is None
              else f"var-{coefficients_fingerprint(coefficients)}")
+    dev = device if device is not None else device_kind()
     return PlanKey(spec_fp=spec_fingerprint(spec),
                    bucket=shape_bucket(tuple(shape)),
                    dtype=dtype_name(dtype),
-                   device=device if device is not None else device_kind(),
-                   coeff=coeff, steps=temporal_steps)
+                   device=dev, coeff=coeff, steps=temporal_steps,
+                   univ=backend_universe(dev))

@@ -40,6 +40,10 @@ DEFAULT_SEVERITY: Dict[str, str] = {
     "lowering-hot-overhead": "error",
     "lowering-sparse-parity": "error",
     "lowering-retrace": "error",
+    # fused-Pallas analyzer (jaxpr-level; interpret-mode safe)
+    "pallas-fused-program": "error",
+    "pallas-fused-gather": "error",
+    "pallas-fused-overhead": "error",
     # code analyzer
     "code-jit-per-call": "error",
     "code-host-sync": "warning",
@@ -54,6 +58,9 @@ DEFAULT_SEVERITY: Dict[str, str] = {
 DEFAULT_HOT_BUDGET: Dict[str, Dict[str, int]] = {
     "gemm": {"gather": 1, "dynamic-slice": 0},
     "sptc": {"gather": 1, "dynamic-slice": 0},
+    # the fused Pallas kernel DMAs its own windows: at most 1 gather per
+    # application may remain outside the fused program, zero dynamic slices
+    "pallas_sptc": {"gather": 1, "dynamic-slice": 0},
 }
 
 

@@ -52,6 +52,126 @@ def test_sptc_spmm_windows_vs_ref(t, rng):
 
 
 # ---------------------------------------------------------------------------
+# sptc_spmm fused v2 — window DMA + in-kernel swap/gather + MXU, one program
+# ---------------------------------------------------------------------------
+
+def _direct_1d(w, x, n_out):
+    return np.stack([np.tensordot(w, x[i:i + len(w)], axes=(0, 0))
+                     for i in range(n_out)])
+
+
+@pytest.mark.parametrize("r,c", [(1, 64), (1, 200), (2, 128), (3, 384)])
+def test_sptc_fused_general_vs_direct(r, c, rng):
+    from repro.kernels.sptc_spmm.ops import sptc_spmm_fused
+    w = rng.normal(size=2 * r + 1)
+    sk = sparsify_stencil_kernel(w)
+    n_out = 3 * sk.L + 2
+    x = rng.normal(size=(n_out + 2 * r, c)).astype(np.float32)
+    got = sptc_spmm_fused(sk.sparse, sk.perm, jnp.asarray(x), n_out=n_out,
+                          L=sk.L, star_fast=False, block_n=256,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _direct_1d(w, x, n_out),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_sptc_fused_star_fast_path_vs_direct(r, rng):
+    """The metadata-free banded path fires for every banded 1-D kernel
+    (the swap∘meta gather is the identity band of the taps)."""
+    from repro.core.sparsify import contiguous_band_values
+    from repro.kernels.sptc_spmm.ops import sptc_spmm_fused
+    w = rng.normal(size=2 * r + 1)
+    sk = sparsify_stencil_kernel(w)
+    assert contiguous_band_values(sk.sparse, sk.perm) is not None
+    n_out = 2 * sk.L + 3
+    x = rng.normal(size=(n_out + 2 * r, 130)).astype(np.float32)
+    got = sptc_spmm_fused(sk.sparse, sk.perm, jnp.asarray(x), n_out=n_out,
+                          L=sk.L, star_fast=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), _direct_1d(w, x, n_out),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sptc_fused_bf16_accumulates_f32(rng):
+    from repro.kernels.sptc_spmm.ops import sptc_spmm_fused
+    w = rng.normal(size=5)                                   # r = 2
+    sk = sparsify_stencil_kernel(w)
+    n_out = 2 * sk.L
+    x = rng.normal(size=(n_out + 4, 128)).astype(np.float32)
+    got = sptc_spmm_fused(sk.sparse, sk.perm, jnp.asarray(x), n_out=n_out,
+                          L=sk.L, compute_dtype="bfloat16", interpret=True)
+    assert got.dtype == jnp.float32          # output stays in input dtype
+    np.testing.assert_allclose(np.asarray(got), _direct_1d(w, x, n_out),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_sptc_fused_rejects_non_swap_perm(rng):
+    from repro.kernels.sptc_spmm.ops import sptc_spmm_fused
+    sk = sparsify_stencil_kernel(rng.normal(size=3))
+    x = jnp.asarray(rng.normal(size=(20, 64)), jnp.float32)
+    with pytest.raises(ValueError, match="strided-swap"):
+        sptc_spmm_fused(sk.sparse, np.arange(2 * sk.L), x, n_out=8, L=sk.L)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode defaults (all four kernel packages' *_call entry points)
+# ---------------------------------------------------------------------------
+
+def test_default_interpret_env_override(monkeypatch):
+    from repro.kernels import common
+    monkeypatch.delenv(common.INTERPRET_ENV_VAR, raising=False)
+    assert common.default_interpret() is True          # CPU container
+    monkeypatch.setenv(common.INTERPRET_ENV_VAR, "0")
+    assert common.default_interpret() is False
+    monkeypatch.setenv(common.INTERPRET_ENV_VAR, "1")
+    assert common.default_interpret() is True
+
+
+def test_all_call_entry_points_default_interpret_to_backend():
+    """interpret must default to None (resolved off the device at call
+    time), never a hardcoded True that silently slow-paths a real TPU."""
+    import inspect
+    from repro.kernels.conv1d.kernel import conv1d_causal_call
+    from repro.kernels.sptc_spmm.kernel import (sptc_fused_call,
+                                                sptc_spmm_call)
+    from repro.kernels.stencil_direct.kernel import stencil2d_call
+    from repro.kernels.stencil_gemm.kernel import windows_gemm_call
+    for fn in (sptc_spmm_call, sptc_fused_call, windows_gemm_call,
+               stencil2d_call, conv1d_causal_call):
+        sig = inspect.signature(fn)
+        assert sig.parameters["interpret"].default is None, fn.__name__
+
+
+def test_sptc_spmm_call_interpret_none_matches_explicit(rng):
+    from repro.kernels.sptc_spmm.kernel import sptc_spmm_call
+    sk = sparsify_stencil_kernel(rng.normal(size=3))
+    x = jnp.asarray(rng.normal(size=(2 * sk.L, 64)), jnp.float32)
+    vals = jnp.asarray(sk.values, jnp.float32)
+    meta = jnp.asarray(sk.meta)
+    got = sptc_spmm_call(vals, meta, x)                # None -> CPU -> True
+    want = sptc_spmm_call(vals, meta, x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# dispatch — pallas_direct 3-D builder
+# ---------------------------------------------------------------------------
+
+def test_pallas_direct_3d_zero_kernel_returns_zeros(rng):
+    """Regression: fn3d returned None when every leading-axis slab was
+    all-zero (every slab skipped, accumulator never initialized)."""
+    from repro.core.stencil import StencilSpec
+    from repro.kernels.dispatch import build
+    spec = StencilSpec(shape="box", ndim=3, radius=1,
+                       weights=np.zeros((3, 3, 3)))
+    fn = build(spec, "pallas_direct", 4)
+    x = jnp.asarray(rng.normal(size=(8, 10, 12)), jnp.float32)
+    y = fn(x)
+    assert y is not None
+    assert y.shape == (6, 8, 10) and y.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(y), np.zeros((6, 8, 10)))
+
+
+# ---------------------------------------------------------------------------
 # stencil_gemm — dense windows GEMM (Tensor-Core baseline analogue)
 # ---------------------------------------------------------------------------
 

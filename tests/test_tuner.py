@@ -177,6 +177,32 @@ def test_plan_key_decodes_v1_and_tolerates_unknown_fields():
         PlanKey.decode("garbage")
 
 
+def test_plan_key_univ_roundtrip_and_v2_back_compat():
+    key = PlanKey(spec_fp="abc", bucket=(64, 32), dtype="float32",
+                  device="cpu", univ="jnp+pallas")
+    assert PlanKey.decode(key.encode()) == key
+    # a pre-v3 key carries no universe field: decodes as plain-jnp tuning
+    v2 = "v2;spec=abc;shape=64x32;dtype=float32;dev=cpu;coeff=const;steps=1"
+    assert PlanKey.decode(v2).univ == "jnp"
+
+
+def test_pallas_universe_plans_cannot_poison_jnp_cache(tmp_path, monkeypatch):
+    """A plan tuned with the Pallas backends forced in (interpret-mode
+    correctness sweep) must never be served to a plain-CPU process."""
+    spec = make_stencil("box", 2, 1, seed=6)
+    monkeypatch.delenv("REPRO_TUNER_INCLUDE_PALLAS", raising=False)
+    plain = plan_key(spec, (20, 20), jnp.float32)
+    monkeypatch.setenv("REPRO_TUNER_INCLUDE_PALLAS", "1")
+    forced = plan_key(spec, (20, 20), jnp.float32)
+    assert plain.univ == "jnp" and forced.univ == "jnp+pallas"
+    assert plain.encode() != forced.encode()
+    cache = PlanCache(path=tmp_path / "plans.json")
+    cache.store(forced, Plan(backend="pallas_sptc", L=4))
+    monkeypatch.delenv("REPRO_TUNER_INCLUDE_PALLAS")
+    assert cache.lookup(plan_key(spec, (20, 20), jnp.float32)) is None
+    assert cache.lookup(forced) == Plan(backend="pallas_sptc", L=4)
+
+
 def test_plan_key_splits_on_coeff_and_steps():
     spec = make_stencil("box", 2, 1, seed=1)
     base = plan_key(spec, (20, 20), jnp.float32)

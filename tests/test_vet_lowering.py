@@ -23,8 +23,9 @@ def test_shipped_engines_certify_zero_overhead():
     cfg = VetConfig()
     findings, verdict = lowering.run(cfg)
     assert findings == [], [f.format() for f in findings]
-    assert set(verdict) == {"stencil_gemm", "sptc_spmm"}
-    for kernel, v in verdict.items():
+    assert set(verdict) == {"stencil_gemm", "sptc_spmm", "sptc_spmm_fused"}
+    for kernel in ("stencil_gemm", "sptc_spmm"):
+        v = verdict[kernel]
         assert v["certified"], (kernel, v)
         assert v["traces"] == 1
         for probe, counts in v["probes"].items():
@@ -37,6 +38,28 @@ def test_shipped_engines_certify_zero_overhead():
     sptc = {k.split("/", 1)[1]: v
             for k, v in verdict["sptc_spmm"]["probes"].items()}
     assert gemm == sptc
+
+
+def test_fused_pallas_kernel_certifies_zero_overhead():
+    """The fused SpTC program owns the swap and the windowing: outside the
+    pallas_call there must be no gathers at all and no dynamic slicing."""
+    findings, probes = lowering.analyze_pallas_fused(VetConfig())
+    assert findings == [], [f.format() for f in findings]
+    assert probes                                    # both registry probes ran
+    for probe, counts in probes.items():
+        assert probe.startswith("sptc_spmm_fused/"), probe
+        assert counts["gather"] == 0, (probe, counts)
+        assert counts.get("dynamic_slice", 0) == 0, (probe, counts)
+        assert counts["pallas_call"] >= 1, (probe, counts)
+
+
+def test_fused_budget_violation_produces_finding():
+    cfg = VetConfig()
+    cfg.lowering_budgets["pallas_sptc"]["dynamic-slice"] = 0
+    # impossible program-count budget: pretend zero fused programs allowed
+    cfg.lowering_budgets["pallas_sptc"]["gather"] = -1
+    findings, _ = lowering.analyze_pallas_fused(cfg)
+    assert any(f.rule == "pallas-fused-gather" for f in findings)
 
 
 def test_tightened_budget_produces_findings():
