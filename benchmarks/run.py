@@ -21,7 +21,7 @@ def main() -> None:
     _section("Figure 9 — throughput across stencil shapes")
     fig9_throughput.main()
     _section("Figure 10 — throughput vs problem size")
-    fig10_scaling.main()
+    fig10_scaling.main([])
     _section("Kernel microbench — dense GEMM vs 2:4 SpMM")
     kernel_bench.main()
     _section("Serving driver — continuous batching (BENCH_serving.json)")

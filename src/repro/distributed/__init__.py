@@ -1,6 +1,9 @@
-from repro.distributed.sharding import (ShardingRules, default_rules,
-                                        param_shardings, constrain,
-                                        use_mesh_rules, spec_for)
+from repro.distributed.halo import ShardedStencilEngine, grid_mesh
+from repro.distributed.sharding import (ShardingRules, active_mesh_rules,
+                                        constrain, default_rules,
+                                        param_shardings, spec_for,
+                                        use_mesh_rules)
 
 __all__ = ["ShardingRules", "default_rules", "param_shardings", "constrain",
-           "use_mesh_rules", "spec_for"]
+           "use_mesh_rules", "active_mesh_rules", "spec_for",
+           "ShardedStencilEngine", "grid_mesh"]

@@ -133,23 +133,69 @@ def param_shardings(axes: Any, shapes: Any, rules: ShardingRules,
 
 
 # -- activation constraints (context-scoped) --------------------------------
+#
+# The active (mesh, rules) pair is a PROCESS-WIDE default with a
+# thread-local override.  It used to be thread-local only, which made
+# ``constrain()`` silently degrade to a no-op on any thread other than
+# the one that entered ``use_mesh_rules`` — in particular the
+# ``BatchScheduler`` worker thread that actually executes serving
+# batches, so serving never applied activation shardings at all.
+#
+# Semantics now: entering ``use_mesh_rules`` installs the pair as the
+# process default (visible to worker threads spawned before or after)
+# AND as this thread's override.  A thread may nest its own context to
+# override locally without disturbing other threads.  Concurrent
+# contexts on different threads race on the process default (last one
+# in wins; each restores what it saw on exit) — serving installs one
+# mesh per process, which is the supported pattern.
 
 _ctx = threading.local()
+_process_state: Optional[Tuple[Mesh, ShardingRules]] = None
+_process_lock = threading.Lock()
 
 
 @contextlib.contextmanager
-def use_mesh_rules(mesh: Mesh, rules: ShardingRules):
-    prev = getattr(_ctx, "state", None)
+def use_mesh_rules(mesh: Mesh, rules: ShardingRules,
+                   process_default: bool = True):
+    """Activate ``(mesh, rules)`` for :func:`constrain`.
+
+    ``process_default=False`` restores the old thread-confined behavior
+    (visible only on the entering thread) for callers that genuinely
+    want per-thread isolation.
+    """
+    global _process_state
+    prev_local = getattr(_ctx, "state", None)
     _ctx.state = (mesh, rules)
+    if process_default:
+        with _process_lock:
+            prev_process = _process_state
+            _process_state = (mesh, rules)
     try:
         yield
     finally:
-        _ctx.state = prev
+        _ctx.state = prev_local
+        if process_default:
+            with _process_lock:
+                _process_state = prev_process
+
+
+def active_mesh_rules() -> Optional[Tuple[Mesh, ShardingRules]]:
+    """The (mesh, rules) ``constrain`` would use on this thread, or None."""
+    state = getattr(_ctx, "state", None)
+    if state is not None:
+        return state
+    with _process_lock:
+        return _process_state
 
 
 def constrain(x, axes: Tuple[Optional[str], ...]):
-    """with_sharding_constraint by logical names; no-op outside a mesh ctx."""
-    state = getattr(_ctx, "state", None)
+    """with_sharding_constraint by logical names; no-op outside a mesh ctx.
+
+    Sees the thread-local override first, then the process-wide default —
+    worker threads (e.g. the serving batch executor) inherit the mesh the
+    main thread entered.
+    """
+    state = active_mesh_rules()
     if state is None:
         return x
     mesh, rules = state

@@ -16,9 +16,12 @@ BatchScheduler` layer (the same one LM decode traffic uses, see
 
   * Jobs are bucketed by **tuner plan key** — spec content fingerprint
     × halo-inclusive shape bucket (next pow2 per dim) × dtype × device
-    × coefficient mode × temporal block size — so every batch runs one
-    compiled program under one tuned plan (a ``temporal_steps=k`` job
-    carries the k·r halo and never co-batches with single-step jobs).
+    × coefficient mode × temporal block size × partition geometry — so
+    every batch runs one compiled program under one tuned plan (a
+    ``temporal_steps=k`` job carries the k·r halo and never co-batches
+    with single-step jobs; a driver constructed with ``mesh=`` runs
+    every job halo-exchange-sharded and buckets apart from
+    single-device traffic).
   * ``padding`` policy decides how near-miss shapes inside a bucket
     co-batch: ``"bucket"`` trailing-pads every job to the pow2 bucket
     shape (one compiled program per plan, some wasted FLOPs), ``"max"``
@@ -74,6 +77,7 @@ class StencilDriver:
                  policy: BatchPolicy | None = None,
                  padding: str = "bucket",
                  mode: str | None = None,
+                 mesh=None,
                  autostart: bool = True):
         if padding not in PADDING_POLICIES:
             raise ValueError(f"padding must be one of {PADDING_POLICIES}, "
@@ -81,6 +85,12 @@ class StencilDriver:
         self.cache = cache if cache is not None else default_cache()
         self.padding = padding
         self.mode = mode
+        # a driver with a mesh partitions EVERY job's grid over it with
+        # halo exchange (distributed/halo.py); the plan key's mesh field
+        # buckets these jobs apart from single-device traffic, so a
+        # sharded fleet and a single-device fleet sharing one cache file
+        # never serve each other's plans
+        self.mesh = mesh
         self.metrics_registry = MetricsRegistry()
         self._specs: dict = {}          # group key -> StencilSpec
         self._steps: dict = {}          # group key -> temporal block size
@@ -93,7 +103,7 @@ class StencilDriver:
                   temporal_steps: int = 1) -> str:
         """The batch group ``(spec, x)`` lands in (tuner plan key string)."""
         key = batch_group_key(spec, x.shape, x.dtype,
-                              temporal_steps=temporal_steps)
+                              temporal_steps=temporal_steps, mesh=self.mesh)
         if self.padding == "exact":
             key += ";exact=" + "x".join(str(s) for s in x.shape)
         return key
@@ -197,7 +207,8 @@ class StencilDriver:
                 jnp.pad(j.x, [(0, t - s) for s, t in zip(j.x.shape, target)])
                 for j in jobs])
             ys = tuned_apply_batched(spec, xs, cache=self.cache,
-                                     mode=self.mode, temporal_steps=steps)
+                                     mode=self.mode, temporal_steps=steps,
+                                     mesh=self.mesh)
         except BaseException:
             m.bump(failed=len(jobs))
             raise

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core.engine import StencilEngine
 from repro.core.stencil import StencilSpec
 from repro.tuner.cache import PlanCache, default_cache
-from repro.tuner.plan import Plan, plan_key
+from repro.tuner.plan import Plan, mesh_desc, plan_key
 from repro.tuner.search import autotune
 
 MODE_ENV_VAR = "REPRO_TUNER_MODE"
@@ -28,26 +28,47 @@ def _resolve_mode(mode: str | None) -> str:
     return mode or os.environ.get(MODE_ENV_VAR, "time")
 
 
+def _is_sharded(mesh: Any) -> bool:
+    return mesh is not None and mesh_desc(mesh) != "1"
+
+
 def plan_for(spec: StencilSpec, shape: Sequence[int],
              dtype: Any = jnp.float32, *,
              cache: PlanCache | None = None, mode: str | None = None,
              temporal_steps: int = 1, coefficients: Any = None,
+             mesh: Any = None,
              warmup: int = 1, iters: int = 3) -> Plan:
     """The cached plan for (spec, halo-inclusive shape, dtype); tunes on miss.
 
     ``temporal_steps`` and ``coefficients`` extend the cache key (and the
     candidate set): a k-step temporal block tunes separately from the
     single-step plan, and a variable-coefficient field tunes per content
-    fingerprint over the backends that support it.
+    fingerprint over the backends that support it.  ``mesh`` (a jax Mesh
+    or per-axis shard counts) keys and tunes the halo-exchange-sharded
+    execution path separately — per-shard blocks see different shapes
+    and communication costs, so a single-device plan must never be
+    served to a sharded run or vice versa.
     """
     cache = cache if cache is not None else default_cache()
-    key = plan_key(spec, tuple(shape), dtype,
-                   coefficients=coefficients, temporal_steps=temporal_steps)
+    key = plan_key(spec, tuple(shape), dtype, coefficients=coefficients,
+                   temporal_steps=temporal_steps, mesh=mesh)
     plan = cache.lookup(key)
     if plan is None:
+        if _is_sharded(mesh):
+            if coefficients is not None:
+                raise NotImplementedError(
+                    "variable-coefficient stencils are not supported on the "
+                    "sharded halo-exchange path (the per-field tables are "
+                    "fixed to the global shape)")
+
+            def factory(s: StencilSpec, p: Plan,
+                        coefficients: Any = None) -> Any:
+                return cache.sharded_engine(s, p, mesh)
+        else:
+            factory = cache.engine
         before = cache.engine_plans(spec)
         result = autotune(spec, tuple(shape), dtype, mode=_resolve_mode(mode),
-                          engine_factory=cache.engine,
+                          engine_factory=factory,
                           temporal_steps=temporal_steps,
                           coefficients=coefficients,
                           warmup=warmup, iters=iters)
@@ -64,29 +85,39 @@ def tuned_engine(spec: StencilSpec, shape: Sequence[int],
                  dtype: Any = jnp.float32, *,
                  cache: PlanCache | None = None, mode: str | None = None,
                  temporal_steps: int = 1, coefficients: Any = None,
-                 warmup: int = 1, iters: int = 3) -> StencilEngine:
-    """Compiled engine for the tuned plan (shared jit cache across calls)."""
+                 mesh: Any = None,
+                 warmup: int = 1, iters: int = 3) -> Any:
+    """Compiled engine for the tuned plan (shared jit cache across calls).
+
+    With a non-trivial ``mesh`` this is a
+    :class:`~repro.distributed.halo.ShardedStencilEngine` (same
+    halo-inclusive call convention); otherwise a ``StencilEngine``.
+    """
     cache = cache if cache is not None else default_cache()
     plan = plan_for(spec, shape, dtype, cache=cache, mode=mode,
                     temporal_steps=temporal_steps, coefficients=coefficients,
-                    warmup=warmup, iters=iters)
+                    mesh=mesh, warmup=warmup, iters=iters)
+    if _is_sharded(mesh):
+        return cache.sharded_engine(spec, plan, mesh)
     return cache.engine(spec, plan, coefficients=coefficients)
 
 
 def tuned_apply(spec: StencilSpec, x: jnp.ndarray, *,
                 cache: PlanCache | None = None,
                 mode: str | None = None, temporal_steps: int = 1,
-                coefficients: Any = None, warmup: int = 1,
-                iters: int = 3) -> jnp.ndarray:
+                coefficients: Any = None, mesh: Any = None,
+                warmup: int = 1, iters: int = 3) -> jnp.ndarray:
     """Apply ``spec`` to ``x`` (halo included) through the tuned plan.
 
     A ``temporal_steps=k`` call expects ``x`` to carry the ``k·r`` halo
     and advances k steps in one compiled program; ``coefficients`` routes
-    through the variable-coefficient emitter (fixed-shape per field).
+    through the variable-coefficient emitter (fixed-shape per field);
+    ``mesh`` block-partitions the grid over a device mesh with halo
+    exchange (`distributed/halo.py`).
     """
     eng = tuned_engine(spec, x.shape, x.dtype, cache=cache, mode=mode,
                        temporal_steps=temporal_steps,
-                       coefficients=coefficients,
+                       coefficients=coefficients, mesh=mesh,
                        warmup=warmup, iters=iters)
     return eng(x)
 
@@ -95,11 +126,22 @@ def _validate_batch(spec: StencilSpec, xs: Any,
                     temporal_steps: int = 1) -> jnp.ndarray:
     """Normalize ``xs`` to one stacked (B, *spatial) array, loudly.
 
-    Accepts a pre-stacked array or a sequence of per-job arrays.  Every
-    job must share ONE shape and dtype — a jit(vmap) program is shape-
-    monomorphic — and mismatches name the offending shapes instead of
-    failing deep inside ``jnp.stack``/``vmap``.
+    Accepts a pre-stacked array or any iterable of per-job arrays
+    (lists, tuples, generators, map objects — a non-array iterable is
+    materialized first, so a generator doesn't fall through to
+    ``jnp.asarray`` and die deep inside JAX).  Every job must share ONE
+    shape and dtype — a jit(vmap) program is shape-monomorphic — and
+    mismatches name the offending shapes instead of failing deep inside
+    ``jnp.stack``/``vmap``.
     """
+    if not isinstance(xs, (list, tuple)) and not hasattr(xs, "ndim"):
+        try:
+            xs = list(xs)
+        except TypeError:
+            raise TypeError(
+                "tuned_apply_batched expects a stacked (B, *spatial) array "
+                "or an iterable of per-job arrays, got "
+                f"{type(xs).__name__}") from None
     if isinstance(xs, (list, tuple)):
         if not xs:
             raise ValueError("tuned_apply_batched got an empty batch")
@@ -135,37 +177,43 @@ def _validate_batch(spec: StencilSpec, xs: Any,
 def tuned_apply_batched(spec: StencilSpec, xs: Any, *,
                         cache: PlanCache | None = None,
                         mode: str | None = None, temporal_steps: int = 1,
+                        mesh: Any = None,
                         warmup: int = 1, iters: int = 3) -> jnp.ndarray:
     """Apply ``spec`` to a batch ``xs`` of shape (B, *spatial-with-halo).
 
-    ``xs`` may also be a sequence of same-shape per-job arrays (it is
+    ``xs`` may also be an iterable of same-shape per-job arrays (it is
     validated and stacked).  The plan is tuned for one instance;
     execution is a single jit(vmap(engine)) program — the many-user
     serving path (continuously batched by `serving/stencil_driver.py`).
     With ``temporal_steps=k`` every job advances k steps (jobs carry the
-    k·r halo).
+    k·r halo).  With a non-trivial ``mesh`` every job's grid is block-
+    partitioned over the device mesh with halo exchange (the batch axis
+    itself stays unsharded).
     """
     cache = cache if cache is not None else default_cache()
     xs = _validate_batch(spec, xs, temporal_steps=temporal_steps)
     plan = plan_for(spec, tuple(xs.shape[1:]), xs.dtype, cache=cache,
-                    mode=mode, temporal_steps=temporal_steps,
+                    mode=mode, temporal_steps=temporal_steps, mesh=mesh,
                     warmup=warmup, iters=iters)
+    if _is_sharded(mesh):
+        return cache.sharded_batched(spec, plan, mesh)(xs)
     return cache.batched(spec, plan)(xs)
 
 
 def batch_group_key(spec: StencilSpec, shape: Sequence[int], dtype: Any,
                     device: str | None = None, *,
-                    temporal_steps: int = 1) -> str:
+                    temporal_steps: int = 1, mesh: Any = None) -> str:
     """Stable string key a serving driver buckets batchable jobs by.
 
     Two jobs with equal keys share one tuned plan AND one compiled
     jit(vmap) program once padded to the bucket shape: the key is the
     encoded :class:`~repro.tuner.plan.PlanKey` (spec fingerprint ×
     halo-inclusive shape bucket × dtype × device kind × coefficient
-    mode × temporal block size).
+    mode × temporal block size × partition geometry — sharded jobs
+    never co-batch with single-device jobs).
     """
     return plan_key(spec, tuple(shape), dtype, device,
-                    temporal_steps=temporal_steps).encode()
+                    temporal_steps=temporal_steps, mesh=mesh).encode()
 
 
 def cache_stats(cache: PlanCache | None = None) -> dict:

@@ -43,7 +43,7 @@ import jax
 from repro.core.engine import StencilEngine
 from repro.core.stencil import StencilSpec
 from repro.tuner.plan import (Plan, PlanKey, coefficients_fingerprint,
-                              spec_fingerprint)
+                              mesh_desc, spec_fingerprint)
 
 CACHE_ENV_VAR = "REPRO_TUNER_CACHE"
 _FORMAT_VERSION = 2
@@ -51,6 +51,9 @@ _READABLE_VERSIONS = (1, 2)
 
 #: engine-map key: (spec fingerprint, plan, coefficient fingerprint)
 EngineKey = Tuple[str, Plan, str]
+
+#: sharded-engine key: (spec fingerprint, plan, mesh geometry, grid axes)
+ShardedKey = Tuple[str, Plan, str, Tuple[int, ...]]
 
 
 @dataclasses.dataclass
@@ -90,6 +93,8 @@ class PlanCache:
         self._plans: Dict[str, Plan] = {}
         self._engines: Dict[EngineKey, StencilEngine] = {}
         self._batched: Dict[EngineKey, Callable] = {}
+        self._sharded: Dict[ShardedKey, Any] = {}
+        self._sharded_batched: Dict[ShardedKey, Callable] = {}
         self._disk_sig: Optional[Tuple[int, int]] = None
         if self.path is not None:
             self.load(missing_ok=True)
@@ -136,7 +141,9 @@ class PlanCache:
     def engine_plans(self, spec: StencilSpec) -> frozenset:
         """Plans that currently have a cached engine for ``spec``."""
         fp = spec_fingerprint(spec)
-        return frozenset(p for f, p, _ in self._engines if f == fp)
+        plans = {p for f, p, _ in self._engines if f == fp}
+        plans.update(k[1] for k in self._sharded if k[0] == fp)
+        return frozenset(plans)
 
     def prune_engines(self, spec: StencilSpec,
                       keep: "frozenset[Plan] | set[Plan]") -> int:
@@ -150,7 +157,12 @@ class PlanCache:
         for k in drop:
             del self._engines[k]
             self._batched.pop(k, None)
-        return len(drop)
+        sdrop = [k for k in self._sharded
+                 if k[0] == fp and k[1] not in keep]
+        for k in sdrop:
+            del self._sharded[k]
+            self._sharded_batched.pop(k, None)
+        return len(drop) + len(sdrop)
 
     def batched(self, spec: StencilSpec, plan: Plan,
                 coefficients: Optional[Any] = None) -> Callable:
@@ -161,6 +173,51 @@ class PlanCache:
             eng = self.engine(spec, plan, coefficients=coefficients)
             fn = jax.jit(jax.vmap(eng._fn))
             self._batched[k] = fn
+        return fn
+
+    # -- sharded executables -------------------------------------------------
+    def _sharded_key(self, spec: StencilSpec, plan: Plan, mesh: Any,
+                     grid_axes: Optional[Tuple[int, ...]]) -> ShardedKey:
+        return (spec_fingerprint(spec), plan, mesh_desc(mesh),
+                tuple(grid_axes) if grid_axes is not None else ())
+
+    def sharded_engine(self, spec: StencilSpec, plan: Plan, mesh: Any,
+                       grid_axes: Optional[Tuple[int, ...]] = None):
+        """The (memoized) halo-exchange engine realizing ``plan`` on ``mesh``.
+
+        ``mesh`` is a jax Mesh or an int/tuple of per-axis shard counts
+        (see :func:`repro.distributed.halo.grid_mesh`).  Keyed by the
+        canonical mesh geometry — two meshes with the same shard counts
+        share one engine (they compile to the same program modulo device
+        order).
+        """
+        from repro.distributed.halo import ShardedStencilEngine
+        k = self._sharded_key(spec, plan, mesh, grid_axes)
+        eng = self._sharded.get(k)
+        if eng is None:
+            self.stats.engine_builds += 1
+            eng = ShardedStencilEngine(
+                spec, mesh, backend=plan.backend, L=plan.L,
+                star_fast_path=plan.star_fast_path,
+                fuse_rows=plan.fuse_rows,
+                temporal_steps=plan.temporal_steps,
+                grid_axes=grid_axes)
+            self._sharded[k] = eng
+        else:
+            self.stats.engine_hits += 1
+        return eng
+
+    def sharded_batched(self, spec: StencilSpec, plan: Plan, mesh: Any,
+                        grid_axes: Optional[Tuple[int, ...]] = None
+                        ) -> Callable:
+        """jit(vmap(sharded engine)): every job in the batch is mesh-
+        partitioned; the batch axis stays unsharded."""
+        k = self._sharded_key(spec, plan, mesh, grid_axes)
+        fn = self._sharded_batched.get(k)
+        if fn is None:
+            eng = self.sharded_engine(spec, plan, mesh, grid_axes=grid_axes)
+            fn = jax.jit(jax.vmap(eng._fn))
+            self._sharded_batched[k] = fn
         return fn
 
     # -- persistence ---------------------------------------------------------
@@ -270,6 +327,8 @@ class PlanCache:
         self._plans.clear()
         self._engines.clear()
         self._batched.clear()
+        self._sharded.clear()
+        self._sharded_batched.clear()
         self._disk_sig = None
         if remove_file and self.path is not None and self.path.exists():
             self.path.unlink()

@@ -7,8 +7,9 @@ object identity), the *input shape bucket* (next power of two per dim,
 so nearby sizes share one plan while jit still specializes exact
 shapes), the *dtype*, the *device kind* (cpu/tpu/gpu — a plan tuned
 on CPU must not be trusted on TPU), the *coefficient mode* (constant
-weights vs a fingerprinted variable-coefficient field), and the
-*temporal block size*.
+weights vs a fingerprinted variable-coefficient field), the
+*temporal block size*, and the *partition geometry* (single-device vs a
+halo-exchange device mesh — see :func:`mesh_desc`).
 
 Schema versioning (``PLAN_SCHEMA``): serialized plans and encoded keys
 carry a version so caches written by future revisions are skipped, not
@@ -36,7 +37,12 @@ from repro.core.transform import default_l
 #:      with the Pallas backends forced in (REPRO_TUNER_INCLUDE_PALLAS
 #:      interpret-mode sweeps) key separately from plain-jnp tuning, so
 #:      they can never poison a shared cache on CPU
-PLAN_SCHEMA = 3
+#:   4  + mesh (partition geometry, e.g. "4x2") on PlanKey — a plan
+#:      timed single-device must never be served to a halo-exchange-
+#:      sharded run of the same spec/shape/dtype or vice versa (per-
+#:      shard blocks see different shapes and communication costs);
+#:      v1–v3 keys decode as mesh="1" (single device)
+PLAN_SCHEMA = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +126,41 @@ def device_kind() -> str:
     return jax.default_backend()
 
 
+def mesh_desc(mesh: Any) -> str:
+    """Canonical partition-geometry string for a plan key.
+
+    ``"1"`` means single-device (no partitioning); a sharded run encodes
+    its per-grid-axis shard counts, e.g. ``"8"`` (1-D mesh) or ``"4x2"``
+    (2-D).  Accepts ``None``, an int, a tuple of shard counts, an
+    already-encoded string, or anything mesh-shaped (``axis_names`` +
+    ``shape`` attributes, i.e. ``jax.sharding.Mesh``).  Extent-1 axes
+    carry no partitioning and are dropped — a mesh of all-1 extents IS
+    single-device execution and canonicalizes to ``"1"``.
+    """
+    if mesh is None:
+        return "1"
+    if isinstance(mesh, str):
+        parts = [p for p in mesh.split("x") if p]
+    elif isinstance(mesh, int):
+        parts = [mesh]
+    elif isinstance(mesh, (tuple, list)):
+        parts = list(mesh)
+    elif hasattr(mesh, "axis_names") and hasattr(mesh, "shape"):
+        parts = [mesh.shape[name] for name in mesh.axis_names]
+    else:
+        raise TypeError(
+            f"mesh must be None, an int, a tuple of shard counts, an "
+            f"encoded string, or a jax Mesh; got {type(mesh).__name__}")
+    try:
+        counts = [int(p) for p in parts]
+    except (TypeError, ValueError):
+        raise ValueError(f"unparseable mesh description {mesh!r}") from None
+    if any(c < 1 for c in counts):
+        raise ValueError(f"mesh shard counts must be >= 1, got {counts}")
+    counts = [c for c in counts if c > 1]
+    return "x".join(str(c) for c in counts) if counts else "1"
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
     """Cache key for one tuning problem."""
@@ -131,6 +172,7 @@ class PlanKey:
     coeff: str = "const"       # "const" | "var-<fingerprint>"
     steps: int = 1             # temporal block size the plan targets
     univ: str = "jnp"          # candidate universe: "jnp" | "jnp+pallas"
+    mesh: str = "1"            # partition geometry: "1" | "8" | "4x2" | ...
 
     def encode(self) -> str:
         """Stable string form used as the JSON dict key (schema-prefixed)."""
@@ -138,16 +180,18 @@ class PlanKey:
         return (f"v{PLAN_SCHEMA};spec={self.spec_fp};shape={shape};"
                 f"dtype={self.dtype};dev={self.device};"
                 f"coeff={self.coeff};steps={int(self.steps)};"
-                f"univ={self.univ}")
+                f"univ={self.univ};mesh={self.mesh}")
 
     @classmethod
     def decode(cls, s: str) -> "PlanKey":
-        """Decode v1 (unversioned), v2 or v3 keys; tolerate unknown fields.
+        """Decode v1 (unversioned) through v4 keys; tolerate unknown fields.
 
         Keys older than v3 carry no universe field and decode as
         ``univ="jnp"`` — pre-existing caches were tuned over the jnp
         universe unless the sweep env forced Pallas in, which is exactly
-        the poisoning case v3 exists to fence off.
+        the poisoning case v3 exists to fence off.  Keys older than v4
+        carry no mesh field and decode as ``mesh="1"`` — everything
+        before the halo-exchange engine was tuned single-device.
 
         Raises ValueError on a future-versioned or structurally corrupt
         key — the cache loader turns that into a warn-and-skip.
@@ -170,13 +214,14 @@ class PlanKey:
                    dtype=parts["dtype"], device=parts["dev"],
                    coeff=parts.get("coeff", "const"),
                    steps=int(parts.get("steps", 1)),
-                   univ=parts.get("univ", "jnp"))
+                   univ=parts.get("univ", "jnp"),
+                   mesh=parts.get("mesh", "1"))
 
 
 def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype: Any,
              device: str | None = None, *,
              coefficients: Optional[Any] = None,
-             temporal_steps: int = 1) -> PlanKey:
+             temporal_steps: int = 1, mesh: Any = None) -> PlanKey:
     from repro.kernels.dispatch import backend_universe
     coeff = ("const" if coefficients is None
              else f"var-{coefficients_fingerprint(coefficients)}")
@@ -185,4 +230,4 @@ def plan_key(spec: StencilSpec, shape: Tuple[int, ...], dtype: Any,
                    bucket=shape_bucket(tuple(shape)),
                    dtype=dtype_name(dtype),
                    device=dev, coeff=coeff, steps=temporal_steps,
-                   univ=backend_universe(dev))
+                   univ=backend_universe(dev), mesh=mesh_desc(mesh))

@@ -44,6 +44,9 @@ DEFAULT_SEVERITY: Dict[str, str] = {
     "pallas-fused-program": "error",
     "pallas-fused-gather": "error",
     "pallas-fused-overhead": "error",
+    # sharded halo-exchange analyzer (needs >= 2 devices to probe)
+    "sharded-collective-budget": "error",
+    "sharded-all-gather": "error",
     # code analyzer
     "code-jit-per-call": "error",
     "code-host-sync": "warning",

@@ -45,6 +45,17 @@ performed OUTSIDE the fused program:
                           pallas_mxu engine lowers with — a standalone
                           permute that failed to fold into the kernel
 
+The **sharded analyzer** (``analyze_sharded``) certifies the distributed
+halo-exchange hot path (``distributed/halo.py``) when this process sees
+more than one device:
+
+  sharded-collective-budget  a fused k-step lowers with != 2
+                          collective-permutes per partitioned mesh axis
+                          (low + high edge; zero-flux boundary is free)
+  sharded-all-gather      anything gather-shaped (all-gather, all-reduce,
+                          all-to-all) on the sharded hot path — the
+                          partitioner rematerialized the global grid
+
 ``verdict()`` additionally returns the per-backend op counts (keyed by
 kernel name: ``stencil_gemm``, ``sptc_spmm``, ``sptc_spmm_fused``) that
 the CLI emits as the certified zero-overhead status.
@@ -273,6 +284,99 @@ def analyze_pallas_fused(cfg: VetConfig
     return findings, per_probe
 
 
+# ---------------------------------------------------------------------------
+# Sharded halo exchange: collective budget on the distributed hot path
+# ---------------------------------------------------------------------------
+
+_SHARDED_PATH = "src/repro/distributed/halo.py"
+
+#: opcodes that would mean the partitioner fell back to gathering the
+#: whole grid instead of exchanging width-k·r halos
+_GATHER_LIKE = ("all-gather", "all-to-all", "all-reduce", "reduce-scatter")
+
+
+def _collective_counts(text: str) -> Dict[str, int]:
+    hist = hlo_parse.opcode_histogram(hlo_parse.parse_module(text))
+    permutes = (hist.get("collective-permute", 0)
+                + hist.get("collective-permute-start", 0))
+    gathers = sum(hist.get(op, 0) + hist.get(op + "-start", 0)
+                  for op in _GATHER_LIKE)
+    return {"collective-permute": permutes, "gather-like": gathers}
+
+
+def sharded_probes() -> Tuple[Tuple[Tuple[str, int, int], tuple, int,
+                                    Tuple[int, ...]], ...]:
+    """(spec ctor args, mesh parts, temporal steps, probe interior shape),
+    scaled to however many devices this process sees."""
+    n = jax.device_count()
+    if n < 2:
+        return ()
+    probes = [
+        (("star", 2, 1), (2,), 1, (24, 24)),
+        (("box", 2, 1), (2,), 2, (24, 24)),
+    ]
+    if n >= 4:
+        probes.append((("box", 2, 2), (2, 2), 1, (24, 24)))
+    return tuple(probes)
+
+
+def analyze_sharded(cfg: VetConfig
+                    ) -> Tuple[List[Finding], Dict[str, dict]]:
+    """Certify the halo-exchange collective budget on the step hot path.
+
+    The distributed contract: one fused k-step exchanges exactly TWO
+    collective-permutes per partitioned axis (low edge + high edge; the
+    zero-flux boundary is ppermute's zero fill, costing nothing extra)
+    and nothing gather-shaped — an all-gather in the lowered program
+    means the partitioner rematerialized the global grid.  Probes lower
+    ``ShardedStencilEngine``'s device-resident step/iterate path (the
+    one-time halo-inclusive ``__call__`` boundary reshard is not the
+    steady state).  Needs >= 2 devices; returns empty findings and
+    probes otherwise (CI supplies virtual devices via
+    ``--xla_force_host_platform_device_count``).
+    """
+    findings: List[Finding] = []
+    per_probe: Dict[str, dict] = {}
+    from repro.distributed.halo import ShardedStencilEngine, grid_mesh
+    for (shape_kind, ndim, radius), parts, steps, shape in sharded_probes():
+        spec = make_stencil(shape_kind, ndim, radius, seed=7)
+        mesh_tag = "x".join(str(p) for p in parts)
+        symbol = (f"halo/{spec.name}/mesh{mesh_tag}"
+                  f"{f'/k{steps}' if steps != 1 else ''}")
+        engine = ShardedStencilEngine(spec, grid_mesh(parts),
+                                      backend="sptc",
+                                      temporal_steps=steps)
+        naxes = len(engine.partition())
+        u = jax.ShapeDtypeStruct(shape, jnp.float32)
+        for tag, nblocks in (("step", 1), ("iterate", 2)):
+            text = jax.jit(engine._run_sharded, static_argnums=1).lower(
+                u, nblocks).compile().as_text()
+            counts = _collective_counts(text)
+            per_probe[f"{symbol}/{tag}"] = counts
+            expected = 2 * naxes
+            if counts["collective-permute"] != expected:
+                findings.append(Finding(
+                    rule="sharded-collective-budget",
+                    severity=cfg.severity_of("sharded-collective-budget"),
+                    path=_SHARDED_PATH, line=0, symbol=f"{symbol}/{tag}",
+                    message=(
+                        f"expected exactly {expected} collective-permutes "
+                        f"per fused step (2 per partitioned axis × {naxes} "
+                        f"axes), lowered program has "
+                        f"{counts['collective-permute']}")))
+            if counts["gather-like"]:
+                findings.append(Finding(
+                    rule="sharded-all-gather",
+                    severity=cfg.severity_of("sharded-all-gather"),
+                    path=_SHARDED_PATH, line=0, symbol=f"{symbol}/{tag}",
+                    message=(
+                        f"{counts['gather-like']} all-gather/all-reduce/"
+                        "all-to-all op(s) on the sharded hot path — the "
+                        "partitioner rematerialized the global grid "
+                        "instead of exchanging width-k·r halos")))
+    return findings, per_probe
+
+
 def run(cfg: VetConfig) -> Tuple[List[Finding], Dict[str, dict]]:
     """All lowering findings + the per-backend zero-overhead verdict."""
     findings: List[Finding] = []
@@ -308,6 +412,15 @@ def run(cfg: VetConfig) -> Tuple[List[Finding], Dict[str, dict]]:
         "probes": fused_probes,
         "certified": not fused_findings,
     }
+    # distributed halo exchange: collective budget per partitioned axis
+    # (probes exist only when this process sees >= 2 devices)
+    sharded_findings, sharded_probes_ran = analyze_sharded(cfg)
+    findings += sharded_findings
+    if sharded_probes_ran:
+        verdict["sharded_halo"] = {
+            "probes": sharded_probes_ran,
+            "certified": not sharded_findings,
+        }
     # retracing: a fixed-shape engine must trace exactly once
     for backend in cfg.lowering_backends:
         kernel = BACKEND_KERNEL.get(backend, backend)

@@ -1,0 +1,300 @@
+"""Distributed halo-exchange sharding (`distributed/halo.py`) + the mesh
+context and plan-key threading around it.
+
+Most of the real multi-device coverage needs virtual devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``), which must be
+set before jax initializes — the main tier-1 suite deliberately runs on
+the single real CPU device (see conftest.py), so those tests skip here
+and run for real in CI's ``distributed`` job.  One subprocess smoke test
+keeps tier-1 exercising the true multi-device path.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import StencilEngine
+from repro.core.stencil import make_stencil
+from repro.distributed.halo import ShardedStencilEngine, grid_mesh
+from repro.distributed.sharding import (active_mesh_rules, constrain,
+                                        default_rules, use_mesh_rules)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DC = jax.device_count()
+
+
+def needs(n):
+    return pytest.mark.skipif(
+        DC < n, reason=f"needs {n} devices (CI distributed job forces 8 "
+                       f"virtual CPU devices; this session has {DC})")
+
+
+def _interior_sizes(parts, h):
+    """Non-divisible interior extents satisfying block > 2h per axis."""
+    n0 = parts[0] * (2 * h + 1) + 3
+    n1 = (parts[1] if len(parts) > 1 else 1) * (2 * h + 1) + 5
+    return max(n0, 21), max(n1, 17)
+
+
+# ---------------------------------------------------------------------------
+# engine correctness vs the single-device direct oracle
+# ---------------------------------------------------------------------------
+
+@needs(8)
+@pytest.mark.parametrize("shape_kind", ["box", "star"])
+@pytest.mark.parametrize("radius", [1, 2])
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("parts", [(8,), (4, 2)], ids=["mesh1d", "mesh2d"])
+def test_sharded_matches_direct_oracle(shape_kind, radius, k, parts, rng):
+    """The acceptance sweep: radius {1,2} × 1-D/2-D mesh × box/star ×
+    temporal_steps {1,2}, on non-divisible shapes (padding path)."""
+    h = k * radius
+    n0, n1 = _interior_sizes(parts, h)
+    spec = make_stencil(shape_kind, 2, radius, seed=3)
+    ref = StencilEngine(spec, backend="direct", temporal_steps=k)
+    eng = ShardedStencilEngine(spec, grid_mesh(parts), temporal_steps=k)
+    assert eng.n_shards == 8
+    # halo-inclusive call convention (matches StencilEngine.__call__)
+    x = jnp.asarray(rng.normal(size=(n0 + 2 * h, n1 + 2 * h)), jnp.float32)
+    np.testing.assert_allclose(eng(x), ref(x), rtol=1e-5, atol=1e-5)
+    # device-resident iterate == zero-re-pad iterate, center-cropped
+    u = jnp.asarray(rng.normal(size=(n0, n1)), jnp.float32)
+    got = eng.iterate(u, 2 * k)
+    want = ref.iterate(jnp.pad(u, h), 2 * k)[h:-h, h:-h]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@needs(8)
+@pytest.mark.parametrize("backend", ["gemm", "sptc"])
+def test_sharded_matrix_backends_match_oracle(backend, rng):
+    """Per-shard body is the same emit(plan) lowering: the matrix
+    backends run unchanged inside shard_map."""
+    spec = make_stencil("box", 2, 2, seed=3)
+    ref = StencilEngine(spec, backend="direct")
+    x = jnp.asarray(rng.normal(size=(44, 52)), jnp.float32)
+    for fuse in (False, True):
+        eng = ShardedStencilEngine(spec, grid_mesh((4, 2)),
+                                   backend=backend, fuse_rows=fuse)
+        np.testing.assert_allclose(eng(x), ref(x), rtol=1e-4, atol=1e-4)
+
+
+@needs(8)
+def test_sharded_1d_grid(rng):
+    spec = make_stencil("star", 1, 2, seed=3)
+    ref = StencilEngine(spec, backend="direct")
+    eng = ShardedStencilEngine(spec, grid_mesh(8))
+    x = jnp.asarray(rng.normal(size=(103,)), jnp.float32)
+    np.testing.assert_allclose(eng(x), ref(x), rtol=1e-5, atol=1e-5)
+
+
+def test_degenerate_single_device_mesh_matches(rng):
+    """A 1-device mesh is valid everywhere (no exchange, plain zero pad)
+    and must agree with the plain engine — runs in tier-1."""
+    spec = make_stencil("box", 2, 1, seed=3)
+    ref = StencilEngine(spec, backend="direct")
+    eng = ShardedStencilEngine(spec, grid_mesh(1))
+    assert eng.n_shards == 1 and eng.partition() == {}
+    x = jnp.asarray(rng.normal(size=(26, 30)), jnp.float32)
+    np.testing.assert_allclose(eng(x), ref(x), rtol=1e-5, atol=1e-5)
+    u = jnp.asarray(rng.normal(size=(24, 28)), jnp.float32)
+    want = ref.iterate(jnp.pad(u, 1), 3)[1:-1, 1:-1]
+    np.testing.assert_allclose(eng.iterate(u, 3), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+@needs(2)
+def test_block_too_small_raises():
+    spec = make_stencil("box", 2, 2, seed=3)
+    eng = ShardedStencilEngine(spec, grid_mesh(2), temporal_steps=2)
+    with pytest.raises(ValueError, match="blocks > 2·k·r"):
+        eng.step(jnp.zeros((14, 20), jnp.float32))   # blocks of 7 <= 8
+
+
+def test_mesh_validation():
+    spec2 = make_stencil("box", 2, 1, seed=3)
+    spec1 = make_stencil("star", 1, 1, seed=3)
+    with pytest.raises(ValueError, match="needs"):
+        grid_mesh(10_000)
+    with pytest.raises(ValueError, match="only 1-D"):
+        ShardedStencilEngine(spec1, grid_mesh((1, 1)))
+    with pytest.raises(ValueError, match="distinct axes"):
+        ShardedStencilEngine(spec2, grid_mesh(1), grid_axes=(5,))
+
+
+@needs(8)
+def test_sharded_batched_vmap(rng):
+    """vmap over the sharded engine: every job mesh-partitioned, batch
+    axis unsharded — the serving super-batch path."""
+    spec = make_stencil("star", 2, 1, seed=3)
+    ref = StencilEngine(spec, backend="direct")
+    eng = ShardedStencilEngine(spec, grid_mesh((4, 2)))
+    xs = jnp.asarray(rng.normal(size=(5, 42, 34)), jnp.float32)
+    ys = jax.jit(jax.vmap(eng._fn))(xs)
+    np.testing.assert_allclose(ys, jax.vmap(ref._fn)(xs),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vet: collective budget on the sharded hot path
+# ---------------------------------------------------------------------------
+
+def test_vet_sharded_probe():
+    """>= 2 devices: the step/iterate hot path lowers with exactly 2
+    collective-permutes per partitioned axis and nothing gather-shaped.
+    Single device: the analyzer skips cleanly (no probes, no findings)."""
+    from repro.vet.config import VetConfig
+    from repro.vet.lowering import analyze_sharded
+    findings, probes = analyze_sharded(VetConfig())
+    assert findings == []
+    if DC < 2:
+        assert probes == {}
+    else:
+        assert probes
+        for symbol, counts in probes.items():
+            assert counts["gather-like"] == 0, symbol
+            expected = 4 if "mesh2x2" in symbol else 2
+            assert counts["collective-permute"] == expected, symbol
+
+
+# ---------------------------------------------------------------------------
+# tuner + serving threading
+# ---------------------------------------------------------------------------
+
+@needs(8)
+def test_tuned_apply_with_mesh(tmp_path, rng):
+    from repro.tuner.api import tuned_apply
+    from repro.tuner.cache import PlanCache
+    spec = make_stencil("box", 2, 1, seed=4)
+    ref = StencilEngine(spec, backend="direct")
+    cache = PlanCache(path=tmp_path / "plans.json")
+    x = jnp.asarray(rng.normal(size=(42, 34)), jnp.float32)
+    y = tuned_apply(spec, x, cache=cache, mode="cost", mesh=(4, 2))
+    np.testing.assert_allclose(y, ref(x), rtol=1e-4, atol=1e-4)
+    # sharded and single-device plans landed in distinct cache entries
+    y1 = tuned_apply(spec, x, cache=cache, mode="cost")
+    np.testing.assert_allclose(y1, ref(x), rtol=1e-4, atol=1e-4)
+    meshes = sorted({k.split("mesh=")[-1] for k in cache._plans})
+    assert meshes == ["1", "4x2"]
+
+
+@needs(8)
+def test_stencil_driver_with_mesh(rng):
+    from repro.serving.stencil_driver import StencilDriver
+    from repro.tuner.cache import PlanCache
+    spec = make_stencil("star", 2, 1, seed=4)
+    ref = StencilEngine(spec, backend="direct")
+    jobs = [jnp.asarray(rng.normal(size=(42, 34)), jnp.float32)
+            for _ in range(4)]
+    with StencilDriver(cache=PlanCache(), mode="cost",
+                       mesh=grid_mesh((4, 2))) as driver:
+        key = driver.group_key(spec, jobs[0])
+        assert "mesh=4x2" in key
+        results = driver.map([(spec, x) for x in jobs])
+    for x, y in zip(jobs, results):
+        np.testing.assert_allclose(y, ref(x), rtol=1e-4, atol=1e-4)
+
+
+def test_driver_mesh_changes_bucket():
+    """Sharded jobs must never co-batch with single-device jobs: the
+    group key carries the mesh geometry (key-level; no devices needed)."""
+    from repro.tuner.api import batch_group_key
+    spec = make_stencil("box", 2, 1, seed=4)
+    plain = batch_group_key(spec, (34, 34), jnp.float32)
+    sharded = batch_group_key(spec, (34, 34), jnp.float32, mesh="4x2")
+    assert plain != sharded
+    assert plain.endswith("mesh=1") and sharded.endswith("mesh=4x2")
+    # a degenerate all-1 mesh IS single-device and shares the bucket
+    assert batch_group_key(spec, (34, 34), jnp.float32,
+                           mesh=(1, 1)) == plain
+
+
+# ---------------------------------------------------------------------------
+# use_mesh_rules thread visibility (the serving worker-thread bugfix)
+# ---------------------------------------------------------------------------
+
+def _one_device_mesh():
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1], dtype=object), ("data",))
+
+
+def test_use_mesh_rules_visible_across_threads():
+    """constrain() used to silently no-op on any thread but the one that
+    entered the context — exactly where BatchScheduler executes batches."""
+    mesh, rules = _one_device_mesh(), default_rules()
+    seen = {}
+
+    def worker():
+        seen["state"] = active_mesh_rules()
+        # must not raise: the constraint resolves against the mesh
+        seen["y"] = constrain(jnp.ones((4, 8)), ("batch", None))
+
+    with use_mesh_rules(mesh, rules):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen["state"] == (mesh, rules)
+    assert seen["y"].shape == (4, 8)
+    assert active_mesh_rules() is None          # context fully unwound
+
+
+def test_use_mesh_rules_thread_local_override():
+    """A thread may nest its own context over the process default; other
+    threads keep seeing the default, and process_default=False restores
+    the old thread-confined behavior."""
+    mesh, rules = _one_device_mesh(), default_rules()
+    override_rules = default_rules(fsdp=False)
+    seen = {}
+
+    def worker():
+        with use_mesh_rules(mesh, override_rules, process_default=False):
+            seen["inside"] = active_mesh_rules()
+        seen["after"] = active_mesh_rules()
+
+    with use_mesh_rules(mesh, rules):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        assert active_mesh_rules() == (mesh, rules)   # main thread intact
+    assert seen["inside"] == (mesh, override_rules)
+    assert seen["after"] == (mesh, rules)             # falls back to default
+
+
+# ---------------------------------------------------------------------------
+# tier-1 subprocess smoke: the true multi-device path
+# ---------------------------------------------------------------------------
+
+def test_multidevice_smoke_subprocess():
+    """Real 4-virtual-device run (flag must precede jax init, so it
+    cannot share this process): sharded == oracle, 2 ppermutes/axis."""
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np, re
+        assert jax.device_count() == 4, jax.device_count()
+        from repro.core.engine import StencilEngine
+        from repro.core.stencil import make_stencil
+        from repro.distributed.halo import ShardedStencilEngine, grid_mesh
+        spec = make_stencil("box", 2, 1, seed=3)
+        eng = ShardedStencilEngine(spec, grid_mesh((2, 2)))
+        ref = StencilEngine(spec, backend="direct")
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(25, 23)).astype(np.float32))
+        np.testing.assert_allclose(eng(x), ref(x), rtol=1e-5, atol=1e-5)
+        text = jax.jit(eng._run_sharded, static_argnums=1).lower(
+            jax.ShapeDtypeStruct((24, 24), jnp.float32), 1
+            ).compile().as_text()
+        cp = len(re.findall(r"collective-permute(?:-start)?\\(", text))
+        ag = len(re.findall(r"all-(?:gather|reduce|to-all)", text))
+        assert cp == 4 and ag == 0, (cp, ag)
+        print("SMOKE-OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    r = subprocess.run([sys.executable, "-c", script], env=env, cwd=REPO,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0 and "SMOKE-OK" in r.stdout, (
+        r.stdout[-2000:] + r.stderr[-2000:])

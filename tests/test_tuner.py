@@ -17,7 +17,7 @@ from repro.kernels.dispatch import applicable_backends
 from repro.tuner import (Plan, PlanCache, autotune, candidate_plans, plan_for,
                          plan_key, shape_bucket, spec_fingerprint, static_cost,
                          tuned_apply, tuned_apply_batched)
-from repro.tuner.plan import PLAN_SCHEMA, PlanKey
+from repro.tuner.plan import PLAN_SCHEMA, PlanKey, mesh_desc
 
 
 def _x(spec, dims, rng, dtype=jnp.float32):
@@ -201,6 +201,73 @@ def test_pallas_universe_plans_cannot_poison_jnp_cache(tmp_path, monkeypatch):
     monkeypatch.delenv("REPRO_TUNER_INCLUDE_PALLAS")
     assert cache.lookup(plan_key(spec, (20, 20), jnp.float32)) is None
     assert cache.lookup(forced) == Plan(backend="pallas_sptc", L=4)
+
+
+def test_plan_key_mesh_roundtrip_and_v3_back_compat():
+    key = PlanKey(spec_fp="abc", bucket=(64, 32), dtype="float32",
+                  device="cpu", mesh="4x2")
+    assert PlanKey.decode(key.encode()) == key
+    # a pre-v4 key carries no mesh field: decodes as single-device tuning
+    v3 = ("v3;spec=abc;shape=64x32;dtype=float32;dev=cpu;coeff=const;"
+          "steps=1;univ=jnp")
+    assert PlanKey.decode(v3).mesh == "1"
+    assert PLAN_SCHEMA == 4 and key.encode().startswith("v4;")
+
+
+def test_mesh_desc_canonicalization():
+    # everything single-device-shaped collapses to the SAME key as None
+    for trivial in (None, 1, (1,), (1, 1), "1", "1x1"):
+        assert mesh_desc(trivial) == "1", trivial
+    assert mesh_desc(8) == "8"
+    assert mesh_desc((4, 2)) == "4x2"
+    assert mesh_desc("4x2") == "4x2"
+    assert mesh_desc((4, 1)) == "4"              # extent-1 axes dropped
+
+    class FakeMesh:                              # jax.sharding.Mesh shape
+        axis_names = ("sp0", "sp1")
+        shape = {"sp0": 4, "sp1": 2}
+    assert mesh_desc(FakeMesh()) == "4x2"
+    with pytest.raises(ValueError, match=">= 1"):
+        mesh_desc((4, 0))
+    with pytest.raises(ValueError, match="unparseable"):
+        mesh_desc("4xpotato")
+    with pytest.raises(TypeError, match="mesh must be"):
+        mesh_desc(3.5)
+
+
+def test_sharded_plans_cannot_poison_single_device_cache(tmp_path):
+    """Mirror of the universe-poisoning fence: a plan tuned for a 4x2
+    block partition must never be served to a single-device lookup, and
+    vice versa — the geometries want different backends/tile sizes."""
+    spec = make_stencil("box", 2, 1, seed=6)
+    plain = plan_key(spec, (20, 20), jnp.float32)
+    sharded = plan_key(spec, (20, 20), jnp.float32, mesh=(4, 2))
+    assert plain.mesh == "1" and sharded.mesh == "4x2"
+    assert plain.encode() != sharded.encode()
+    cache = PlanCache(path=tmp_path / "plans.json")
+    cache.store(sharded, Plan(backend="sptc", L=8))
+    assert cache.lookup(plain) is None
+    assert cache.lookup(sharded) == Plan(backend="sptc", L=8)
+    # and the sharded entry round-trips through the JSON file
+    reloaded = PlanCache(path=tmp_path / "plans.json")
+    assert reloaded.lookup(sharded) == Plan(backend="sptc", L=8)
+    # a degenerate all-1 mesh IS single-device: shares the plain entry
+    assert plan_key(spec, (20, 20), jnp.float32, mesh=(1, 1)) == plain
+
+
+def test_batched_accepts_generators_and_rejects_junk(rng):
+    """_validate_batch used to iterate generators lazily and fail deep in
+    jnp.stack with an opaque error; now it materializes them loudly."""
+    spec = make_stencil("star", 2, 1, seed=2)
+    xs = [_x(spec, (18, 18), rng) for _ in range(3)]
+    stacked = tuned_apply_batched(spec, jnp.stack(xs), mode="cost")
+    via_gen = tuned_apply_batched(spec, (x for x in xs), mode="cost")
+    np.testing.assert_allclose(np.asarray(via_gen), np.asarray(stacked),
+                               rtol=1e-6, atol=1e-6)
+    with pytest.raises(TypeError, match="iterable of per-job arrays"):
+        tuned_apply_batched(spec, object(), mode="cost")
+    with pytest.raises(ValueError, match="empty"):
+        tuned_apply_batched(spec, iter([]), mode="cost")
 
 
 def test_plan_key_splits_on_coeff_and_steps():
